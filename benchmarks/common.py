@@ -1,0 +1,97 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Workload scaling: testbed iterations are O(100 ms); to keep CPU wall-time
+tractable the benchmarks run the same phase *ratios* scaled by
+``WORK_SCALE`` (interleaving dynamics depend on ratios, not absolutes —
+validated by tests/test_netsim.py::test_scale_invariance). Full-scale runs:
+``REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro import netsim, workload
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+FULL = bool(int(os.environ.get("REPRO_FULL", "0")))
+WORK_SCALE = 1.0 if FULL else 0.25
+SIM_TIME = 20.0 if FULL else 4.0
+DT = 2e-5
+
+# paper §4.1 defaults per scheme
+PARAMS = {
+    ("reno", "WI"): (1.75, 0.25),
+    ("reno", "MD"): (1.0, 1.0),
+    ("cubic", "WI"): (1.0, 0.5),
+    ("cubic", "MD"): (0.8, 0.8),
+    ("dcqcn", "WI"): (1.067, 0.267),
+    ("dcqcn", "MD"): (1.067, 0.267),
+}
+ALGOS = {"reno": Algo.RENO, "cubic": Algo.CUBIC, "dcqcn": Algo.DCQCN}
+
+# ECN thresholds for the RoCE fabric; RED drop thresholds for TCP
+RED_BY_ALGO = {
+    "reno": dict(red_qmin=150e3, red_qmax=1.5e6, red_pmax=0.12),
+    "cubic": dict(red_qmin=150e3, red_qmax=1.5e6, red_pmax=0.12),
+    "dcqcn": dict(red_qmin=50e3, red_qmax=400e3, red_pmax=0.2),
+}
+
+
+def protocol(algo: str, variant: str = "WI", slope=None, intercept=None,
+             f_spec: str = "linear", **cfg_kw) -> MLTCPConfig:
+    var = {"OFF": Variant.OFF, "WI": Variant.WI, "MD": Variant.MD,
+           "BOTH": Variant.BOTH}[variant]
+    s_def, i_def = PARAMS.get((algo, "WI" if variant == "OFF" else variant),
+                              (1.75, 0.25))
+    return MLTCPConfig(
+        cc=CCParams(algo=int(ALGOS[algo]), variant=int(var), tick_dt=DT,
+                    rtt=100e-6),
+        slope=s_def if slope is None else slope,
+        intercept=i_def if intercept is None else intercept,
+        f_spec=f_spec,
+        **cfg_kw)
+
+
+def sim(topo, profiles, proto, *, sim_time=None, seed=1, straggle_prob=None,
+        start_offset=None, cassini=None, static_job_factors=None,
+        scale=None, **kw) -> netsim.SimResult:
+    scale = WORK_SCALE if scale is None else scale
+    profiles = [p.scaled(scale) for p in profiles]
+    jobs = workload.jobspec_from_profiles(profiles,
+                                          straggle_prob=straggle_prob,
+                                          start_offset=start_offset)
+    algo = {int(v): k for k, v in ALGOS.items()}[proto.cc.algo]
+    cfg = netsim.SimConfig(
+        topo=topo, jobs=jobs, protocol=proto,
+        sim_time=SIM_TIME if sim_time is None else sim_time, dt=DT,
+        seed=seed, cassini=cassini, static_job_factors=static_job_factors,
+        **{**RED_BY_ALGO[algo], **kw})
+    raw = netsim.simulate(cfg)
+    return netsim.postprocess(cfg, raw)
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    wall_s: float
+    n_ticks: int
+    derived: dict
+
+    def csv_line(self) -> str:
+        us = 1e6 * self.wall_s / max(self.n_ticks, 1)
+        key, val = next(iter(self.derived.items()))
+        return f"{self.name},{us:.3f},{key}={val}"
+
+
+def timed(name: str, fn) -> BenchResult:
+    t0 = time.time()
+    derived, n_ticks = fn()
+    return BenchResult(name, time.time() - t0, n_ticks, derived)
+
+
+def gpt2(n: int = 1) -> list[workload.CommProfile]:
+    return [workload.profile_for("gpt2") for _ in range(n)]

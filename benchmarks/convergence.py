@@ -1,0 +1,61 @@
+"""Figures 7, 8, 9 — convergence benchmarks.
+
+Two GPT-2 data-parallel jobs share the dumbbell; compare default Reno /
+CUBIC / DCQCN against their MLTCP variants on: interleave convergence
+(iterations until the comm phases separate), drop/ECN-mark rate, and avg /
+p99 training-iteration times.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro import netsim
+
+
+def _converged_iteration(res: netsim.SimResult) -> float:
+    """First iteration index after which per-iteration times stay within 10%
+    of the tail median (the paper's 'stabilizes after ~N iterations')."""
+    xs = res.iter_times[0]
+    if xs.size < 10:
+        return float("nan")
+    tail = np.median(xs[len(xs) // 2:])
+    ok = np.abs(xs - tail) <= 0.1 * tail
+    for i in range(len(ok)):
+        if ok[i:].all():
+            return float(i)
+    return float(len(ok))
+
+
+def run_one(algo: str, sockets: int = 2) -> dict:
+    topo = netsim.dumbbell(2, sockets_per_job=sockets)
+    profs = common.gpt2(2)
+    base = common.sim(topo, profs, common.protocol(algo, "OFF"))
+    ml = common.sim(topo, profs, common.protocol(algo, "WI"))
+    sp = netsim.speedup_stats(base, ml)
+    return {
+        "algo": algo,
+        "baseline_interleave": netsim.mean_pairwise_interleave(base),
+        "mltcp_interleave": netsim.mean_pairwise_interleave(ml),
+        "converged_at_iter": _converged_iteration(ml),
+        "drop_reduction": (base.drops_per_s / ml.drops_per_s
+                           if ml.drops_per_s > 0 else float("inf")),
+        "mark_reduction": (base.marks_per_s / ml.marks_per_s
+                           if ml.marks_per_s > 0 else float("inf")),
+        "avg_speedup": sp["avg_speedup"],
+        "p99_speedup": sp["p99_speedup"],
+    }
+
+
+def run(algos=("reno", "cubic", "dcqcn")) -> tuple[dict, int]:
+    out = {}
+    for algo in algos:
+        out[algo] = run_one(algo)
+    n_ticks = int(common.SIM_TIME / common.DT) * 2 * len(algos)
+    return out, n_ticks
+
+
+if __name__ == "__main__":
+    import json
+    res, _ = run()
+    print(json.dumps(res, indent=1))

@@ -1,0 +1,79 @@
+"""Figures 15, 16, 17 — parameter guidelines.
+
+  fig15: aggressiveness functions F1..F4 (increasing) interleave and speed
+         up; F5, F6 (decreasing) do not — the SRPT-reinforcement claim.
+  fig16: S x I sweep heatmap of MLTCP-Reno speedups.
+  fig17: WI vs MD variants perform similarly (Reno and CUBIC).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro import netsim
+
+
+def fig15_agg_functions(fns=("F1", "F2", "F3", "F4", "F5", "F6")
+                        ) -> tuple[dict, int]:
+    topo = netsim.dumbbell(3, sockets_per_job=2)
+    profs = common.gpt2(3)
+    base = common.sim(topo, profs, common.protocol("reno", "OFF"))
+    out = {}
+    for f in fns:
+        res = common.sim(topo, profs, common.protocol("reno", "WI",
+                                                      f_spec=f))
+        sp = netsim.speedup_stats(base, res)
+        out[f] = {
+            "avg_speedup": round(sp["avg_speedup"], 3),
+            "interleave": round(netsim.mean_pairwise_interleave(res), 3),
+        }
+    return out, int(common.SIM_TIME / common.DT) * (len(fns) + 1)
+
+
+def fig16_heatmap(slopes=(0.5, 1.0, 1.75, 2.5),
+                  intercepts=(0.1, 0.25, 0.5, 1.0)) -> tuple[dict, int]:
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    profs = common.gpt2(2)
+    base = common.sim(topo, profs, common.protocol("reno", "OFF"))
+    grid = {}
+    n = 1
+    for s in slopes:
+        for i in intercepts:
+            res = common.sim(topo, profs,
+                             common.protocol("reno", "WI", slope=s,
+                                             intercept=i))
+            sp = netsim.speedup_stats(base, res)
+            grid[f"S={s},I={i}"] = {
+                "avg_speedup": round(sp["avg_speedup"], 3),
+                "p99_speedup": round(sp["p99_speedup"], 3),
+            }
+            n += 1
+    best = max(grid, key=lambda k: grid[k]["avg_speedup"])
+    grid["best"] = {"at": best, **grid[best]}
+    return grid, int(common.SIM_TIME / common.DT) * n
+
+
+def fig17_wi_vs_md() -> tuple[dict, int]:
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    profs = common.gpt2(2)
+    out = {}
+    n = 0
+    for algo in ("reno", "cubic"):
+        base = common.sim(topo, profs, common.protocol(algo, "OFF"))
+        for variant in ("WI", "MD"):
+            res = common.sim(topo, profs, common.protocol(algo, variant))
+            sp = netsim.speedup_stats(base, res)
+            out[f"{algo}-{variant}"] = {
+                "avg_speedup": round(sp["avg_speedup"], 3),
+                "p99_speedup": round(sp["p99_speedup"], 3),
+            }
+            n += 1
+        n += 1
+    return out, int(common.SIM_TIME / common.DT) * n
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps({"fig15": fig15_agg_functions()[0],
+                      "fig16": fig16_heatmap()[0],
+                      "fig17": fig17_wi_vs_md()[0]}, indent=1))

@@ -1,0 +1,53 @@
+"""Figure 13 — partially compatible jobs: MLQCN vs Static [67].
+
+Sweep compatibility by varying the jobs' compute:comm ratios (the paper
+varies batch size). Static = fixed unfair per-job factors; MLQCN adapts.
+The paper: below compat ~0.7 Static's p99 drops under 1.0 (worse than
+default DCQCN) while MLQCN stays >= 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from repro import netsim, workload
+
+
+def _job_with_compute(base, compute_s: float):
+    return dataclasses.replace(base, compute_s=(compute_s,))
+
+
+def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
+    topo = netsim.dumbbell(3, sockets_per_job=2)
+    base_prof = workload.profile_for("gpt2")
+    out = {}
+    n_sims = 0
+    for cs in compute_scales:
+        profs = [_job_with_compute(base_prof, base_prof.compute_s[0] * cs)
+                 for _ in range(3)]
+        compat = workload.compatibility_score(
+            profs[0].scaled(common.WORK_SCALE),
+            profs[1].scaled(common.WORK_SCALE))
+        base = common.sim(topo, profs, common.protocol("dcqcn", "OFF"))
+        ml = common.sim(topo, profs, common.protocol("dcqcn", "WI"))
+        # Static [67]: constant per-job factors replace F; needs a non-OFF
+        # variant so the factors reach the increase hook
+        static = common.sim(topo, profs, common.protocol("dcqcn", "WI"),
+                            static_job_factors=np.asarray([1.3, 1.0, 0.7]))
+        sp_ml = netsim.speedup_stats(base, ml)
+        sp_st = netsim.speedup_stats(base, static)
+        out[f"compat={compat:.2f}"] = {
+            "mlqcn_avg": round(sp_ml["avg_speedup"], 3),
+            "mlqcn_p99": round(sp_ml["p99_speedup"], 3),
+            "static_avg": round(sp_st["avg_speedup"], 3),
+            "static_p99": round(sp_st["p99_speedup"], 3),
+        }
+        n_sims += 3
+    return out, int(common.SIM_TIME / common.DT) * n_sims
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run()[0], indent=1))

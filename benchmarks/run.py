@@ -1,0 +1,53 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time per
+simulator tick across the benchmark's simulations) and writes the full
+derived metrics to results/benchmarks.json.
+
+Quick mode (default) scales workloads per benchmarks/common.py; set
+REPRO_FULL=1 for paper-scale runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import (
+    circular,
+    common,
+    convergence,
+    diversity,
+    parameters,
+    partial_compat,
+    speedup_vs_jobs,
+    stragglers,
+)
+
+
+def main() -> None:
+    suites = [
+        ("fig7_9_convergence", convergence.run),
+        ("fig10_speedup_vs_jobs", speedup_vs_jobs.run),
+        ("fig11_table2_diversity", diversity.run),
+        ("fig12_stragglers", stragglers.run),
+        ("fig13_partial_compat", partial_compat.run),
+        ("fig14_circular_dependency", circular.run),
+        ("fig15_agg_functions", parameters.fig15_agg_functions),
+        ("fig16_slope_intercept", parameters.fig16_heatmap),
+        ("fig17_wi_vs_md", parameters.fig17_wi_vs_md),
+    ]
+    all_results = {}
+    lines = []
+    for name, fn in suites:
+        r = common.timed(name, fn)
+        all_results[name] = r.derived
+        lines.append(r.csv_line())
+        print(r.csv_line(), flush=True)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(all_results, f, indent=1)
+    print("# wrote results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Figure 10 — training-iteration speedup as competing-job count grows.
+
+The paper: MLTCP-Reno plateaus ~1.3x avg / 1.5x p99; MLQCN reaches 2x / 4x
+as DCQCN's congestion collapse (pause storms) worsens with more jobs.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro import netsim
+
+
+def run(algos=("reno", "dcqcn"), job_counts=(2, 3, 4, 5, 6)) -> tuple[dict, int]:
+    out = {}
+    total_sims = 0
+    for algo in algos:
+        for n in job_counts:
+            topo = netsim.dumbbell(n, sockets_per_job=2)
+            profs = common.gpt2(n)
+            base = common.sim(topo, profs, common.protocol(algo, "OFF"))
+            ml = common.sim(topo, profs, common.protocol(algo, "WI"))
+            sp = netsim.speedup_stats(base, ml)
+            out[f"{algo}_{n}jobs"] = {
+                "avg_speedup": round(sp["avg_speedup"], 3),
+                "p99_speedup": round(sp["p99_speedup"], 3),
+            }
+            total_sims += 2
+    return out, int(common.SIM_TIME / common.DT) * total_sims
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run()[0], indent=1))

@@ -1,0 +1,50 @@
+"""Visualize MLTCP's convergence: per-job link utilization as ASCII art
+(the paper's Figure 7a), before and after enabling MLTCP.
+
+    PYTHONPATH=src python examples/interleave_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro import netsim, workload  # noqa: E402
+from repro.core import Algo, CCParams, MLTCPConfig, Variant  # noqa: E402
+
+DT = 2e-5
+
+
+def run(variant):
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    prof = workload.profile_for("gpt2").scaled(0.25)
+    jobs = workload.jobspec_from_profiles([prof, prof])
+    proto = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO), variant=int(variant),
+                                    tick_dt=DT, rtt=100e-6),
+                        slope=1.75, intercept=0.25)
+    cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
+                           sim_time=3.0, dt=DT, seed=1, n_chunks=600)
+    return netsim.postprocess(cfg, netsim.simulate(cfg))
+
+
+def ascii_trace(res, title, tail=120):
+    tput = res.trace_jobtput[-tail:] / 6.25e9
+    print(f"\n{title}  (each column = one trace chunk; rows = jobs)")
+    for j in range(tput.shape[1]):
+        line = "".join(" .:-=+*#%@"[min(int(u * 9.99), 9)] for u in tput[:, j])
+        print(f"  job{j} |{line}|")
+
+
+def main():
+    base = run(Variant.OFF)
+    ml = run(Variant.WI)
+    ascii_trace(base, "default Reno — comm phases collide")
+    ascii_trace(ml, "MLTCP-Reno — comm phases interleave")
+    print(f"\ninterleave score: {netsim.mean_pairwise_interleave(base):.2f} "
+          f"-> {netsim.mean_pairwise_interleave(ml):.2f} (0 = interleaved)")
+    print(f"avg iteration: {base.avg_iter(0) * 1e3:.1f} ms -> "
+          f"{ml.avg_iter(0) * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

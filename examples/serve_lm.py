@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill a prompt batch, then greedy-decode with KV
+(and recurrent-state) caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — production-grade JAX reproduction of MLTCP (Rajasekaran et al., 2024).
+
+Layers:
+  core/       MLTCP protocol: aggressiveness functions, favoritism, Algorithm 1,
+              congestion-control variants (Reno / CUBIC / DCQCN) +/- MLTCP.
+  netsim/     vectorized fluid network simulator (links, queues, RED/ECN, RTT).
+  workload/   DNN-job communication/compute phase models + baselines.
+  models/     the 10 assigned architectures as composable JAX modules.
+  configs/    exact public configs + input shapes.
+  kernels/    Pallas TPU kernels (flash attention, fused CC tick, RG-LRU scan).
+  data/optim/train/checkpoint/launch/cluster/roofline — training substrate.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""checkpoint — sharded, mesh-agnostic save/restore with atomic commits."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,140 @@
+"""Checkpoint manager — fault-tolerance substrate.
+
+Design (1000+-node posture, DESIGN.md §6):
+  * **atomic commit**: writes land in ``step_N.tmp`` and are renamed to
+    ``step_N`` only after every leaf + manifest is durably written, so a
+    preempted save can never be mistaken for a valid checkpoint;
+  * **mesh-agnostic**: leaves are stored as full logical arrays + the
+    manifest records the tree structure; restore re-shards onto whatever
+    mesh/PartitionSpec the *new* job uses (elastic shrink/grow) — on a real
+    multi-host pod each process would write its addressable shards instead
+    (same manifest format, per-shard files);
+  * **async**: array serialization runs on a background thread; `wait()`
+    joins before the next save or program exit;
+  * **keep-N retention** + automatic latest-step discovery for restarts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return _SAFE.sub("_", ".".join(parts)) or "leaf"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # gather to host
+
+        def work():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            leaves = jax.tree_util.tree_flatten_with_path(host_tree)[0]
+            manifest = {"step": step, "leaves": []}
+            seen: dict[str, int] = {}
+            for path, leaf in leaves:
+                name = _leaf_name(path)
+                if name in seen:           # disambiguate collisions
+                    seen[name] += 1
+                    name = f"{name}__{seen[name]}"
+                else:
+                    seen[name] = 0
+                np.save(os.path.join(tmp, name + ".npy"), leaf,
+                        allow_pickle=False)
+                manifest["leaves"].append(
+                    {"file": name + ".npy",
+                     "shape": list(leaf.shape),
+                     "dtype": str(leaf.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic commit
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``like``; optionally device_put each
+        leaf with the matching sharding (elastic re-shard on load)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = [np.load(os.path.join(d, rec["file"]), allow_pickle=False)
+                  for rec in manifest["leaves"]]
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(flat_like) != len(arrays):
+            raise ValueError(
+                f"checkpoint has {len(arrays)} leaves, expected "
+                f"{len(flat_like)} — incompatible tree")
+        if shardings is not None:
+            flat_sh = jax.tree_util.tree_flatten(shardings)[0]
+            out = [jax.device_put(a.astype(l.dtype), s)
+                   for a, l, s in zip(arrays, flat_like, flat_sh)]
+        else:
+            out = [jnp.asarray(a.astype(l.dtype)) for a, l in
+                   zip(arrays, flat_like)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for d in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[: max(0, len(steps) - self.keep_n)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

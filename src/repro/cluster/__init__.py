@@ -1,0 +1,12 @@
+"""cluster — shared-cluster simulation of the framework's own training jobs.
+
+Bridges the two halves of the system: the trainer side computes each
+(architecture x parallelization) job's per-iteration communication profile
+(the `total_bytes` MLTCP needs and the compute gaps between bursts), and the
+netsim side runs those jobs as competing traffic under MLTCP or baselines.
+"""
+
+from repro.cluster.profiles import profile_from_arch
+from repro.cluster.runner import simulate_shared_cluster
+
+__all__ = ["profile_from_arch", "simulate_shared_cluster"]

@@ -1,0 +1,66 @@
+"""Per-iteration communication profiles of the assigned architectures.
+
+The multi-pod deployment model (DESIGN.md §2): a job trains on 1-2 v5e pods;
+within a pod, TP/EP traffic rides ICI, but the *data-parallel gradient
+all-reduce across pods* rides the shared data-center network — that is the
+traffic MLTCP schedules, and several jobs' pods share DCN links.
+
+  comm_bytes/iter = 2 * (pods-1)/pods * grad_bytes        (ring all-reduce)
+  compute_s/iter  = MODEL_FLOPS / (chips * peak * MFU) + intra-pod comm,
+                    i.e. the roofline-informed step time with everything
+                    except the DCN phase folded into the "compute" gap.
+
+MoE archs add a second, smaller burst (expert-parallel spillover across
+pods when experts outgrow one pod — llama4's 128 experts over 2 pods).
+Gradient compression (repro.optim.grad_compress) plugs in by scaling
+grad_bytes — the knob the paper's related work (QSGD/DGC) turns.
+"""
+from __future__ import annotations
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.grad_compress import CompressionConfig, wire_bytes
+from repro.roofline.hw import V5E
+from repro.workload.comm_model import CommProfile
+
+
+def profile_from_arch(cfg: ModelConfig, *, pods: int = 2,
+                      chips_per_pod: int = 64,
+                      tokens_per_iter: int = 16 * 4096,
+                      mfu: float = 0.4,
+                      grad_dtype_bytes: float = 2.0,
+                      dcn_nics: int = 16,
+                      compression: CompressionConfig | None = None,
+                      hw=V5E) -> CommProfile:
+    """Defaults model the *contended* regime the paper studies: modest
+    fine-tuning slices (64 chips/pod, 64k-token batches) whose cross-pod
+    gradient all-reduce rides ``dcn_nics`` shared 50 Gbps DCN uplinks —
+    large-batch full-pod jobs are compute-dominated and rarely contend."""
+    n_params = transformer.param_count(cfg)
+    n_active = transformer.active_param_count(cfg)
+
+    grad_bytes = n_params * grad_dtype_bytes
+    if compression is not None and compression.scheme != "none":
+        grad_bytes = wire_bytes(compression, n_params, pods) \
+            / (2.0 * (pods - 1) / pods)
+    dcn_bytes = 2.0 * (pods - 1) / pods * grad_bytes / dcn_nics
+    # bytes per shared DCN uplink of the cross-pod all-reduce
+
+    flops = 6.0 * n_active * tokens_per_iter
+    compute_s = flops / (pods * chips_per_pod * hw.peak_flops_bf16 * mfu)
+
+    if cfg.moe is not None and pods > 1:
+        # expert-parallel all-to-all spillover across pods: each token's
+        # hidden vector crosses the DCN once in each direction for the
+        # fraction of experts living on the other pod
+        frac_remote = (pods - 1) / pods
+        a2a = (2.0 * tokens_per_iter * cfg.moe.top_k * cfg.d_model
+               * grad_dtype_bytes * frac_remote) / (pods * dcn_nics)
+        return CommProfile(
+            name=cfg.name,
+            compute_s=(compute_s * 0.6, compute_s * 0.4),
+            comm_bytes=(a2a, dcn_bytes),
+            parallelism="dp+ep",
+        )
+    return CommProfile(name=cfg.name, compute_s=(compute_s,),
+                       comm_bytes=(dcn_bytes,), parallelism="dp")

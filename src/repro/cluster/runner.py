@@ -1,0 +1,63 @@
+"""Shared-cluster simulation driver: N framework jobs on one DCN fabric."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import netsim, workload
+from repro.cluster.profiles import profile_from_arch
+from repro.configs import get_config
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    jobs: list[str]
+    baseline_avg: list[float]
+    mltcp_avg: list[float]
+    avg_speedup: float
+    p99_speedup: float
+    interleave_before: float
+    interleave_after: float
+
+
+def simulate_shared_cluster(arch_ids: list[str], *, algo: str = "dcqcn",
+                            sim_time: float = 4.0, seed: int = 0,
+                            sockets_per_job: int = 2,
+                            work_scale: float = 0.05) -> ClusterReport:
+    """Run the assigned-architecture jobs as competing DCN traffic,
+    default vs MLTCP congestion control.  ``work_scale`` shrinks all phase
+    programs uniformly (ratio-preserving) to keep CPU wall time sane."""
+    profiles = [profile_from_arch(get_config(a)).scaled(work_scale)
+                for a in arch_ids]
+    topo = netsim.dumbbell(len(arch_ids), sockets_per_job=sockets_per_job)
+    jobs = workload.jobspec_from_profiles(profiles)
+    dt = 2e-5
+    algo_id = {"reno": Algo.RENO, "cubic": Algo.CUBIC,
+               "dcqcn": Algo.DCQCN}[algo]
+    slope, intercept = (1.067, 0.267) if algo == "dcqcn" else (1.75, 0.25)
+    red = (dict(red_qmin=50e3, red_qmax=400e3, red_pmax=0.2)
+           if algo == "dcqcn" else {})
+
+    def run(variant):
+        proto = MLTCPConfig(
+            cc=CCParams(algo=int(algo_id), variant=int(variant),
+                        tick_dt=dt, rtt=100e-6),
+            slope=slope, intercept=intercept)
+        cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
+                               sim_time=sim_time, dt=dt, seed=seed, **red)
+        return netsim.postprocess(cfg, netsim.simulate(cfg))
+
+    base = run(Variant.OFF)
+    ml = run(Variant.WI)
+    sp = netsim.speedup_stats(base, ml)
+    return ClusterReport(
+        jobs=arch_ids,
+        baseline_avg=[base.avg_iter(j) for j in range(len(arch_ids))],
+        mltcp_avg=[ml.avg_iter(j) for j in range(len(arch_ids))],
+        avg_speedup=sp["avg_speedup"],
+        p99_speedup=sp["p99_speedup"],
+        interleave_before=netsim.mean_pairwise_interleave(base),
+        interleave_after=netsim.mean_pairwise_interleave(ml),
+    )

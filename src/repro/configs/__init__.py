@@ -1,0 +1,6 @@
+"""configs — assigned architectures (exact public configs) and input shapes."""
+
+from repro.configs.registry import ARCH_IDS, get_config, shape_skip_reason
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+__all__ = ["ARCH_IDS", "get_config", "shape_skip_reason", "SHAPES", "ShapeSpec"]

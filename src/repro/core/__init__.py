@@ -1,0 +1,35 @@
+"""MLTCP core — the paper's primary contribution.
+
+Exports the bandwidth-aggressiveness function family (paper §3.3, Fig 5), the
+job-favoritism policies (§3.2), the iteration-boundary detector (Algorithm 1),
+and the congestion-control variants (Reno / CUBIC / DCQCN) with MLTCP's
+window-increase (WI) and multiplicative-decrease (MD) augmentations (§3.4).
+"""
+
+from repro.core.aggressiveness import linear, make_fn, paper_functions
+from repro.core.iteration import (
+    IterDetectParams,
+    IterDetectState,
+    run_on_trace,
+    update_mltcp_params,
+)
+from repro.core.mltcp import (
+    Algo,
+    CCParams,
+    Feedback,
+    FlowCCState,
+    MLTCPConfig,
+    MLTCPState,
+    Variant,
+    cc_tick,
+    init_flow_state,
+    init_state,
+    send_rate,
+)
+
+__all__ = [
+    "linear", "make_fn", "paper_functions",
+    "IterDetectParams", "IterDetectState", "run_on_trace", "update_mltcp_params",
+    "Algo", "CCParams", "Feedback", "FlowCCState", "MLTCPConfig", "MLTCPState",
+    "Variant", "cc_tick", "init_flow_state", "init_state", "send_rate",
+]

@@ -1,0 +1,110 @@
+"""Bandwidth aggressiveness functions F(bytes_ratio)  — paper §3.3, Figure 5.
+
+MLTCP scales congestion-control aggressiveness by ``F(bytes_ratio)`` where
+``bytes_ratio = bytes_sent / total_bytes`` of the current training iteration.
+The paper's requirements for a valid F (§3.3):
+
+  (i)   the range is large enough to absorb network noise,
+  (ii)  dF/dx >= 0 (non-negative derivative),
+  (iii) all flows use the same F.
+
+The default is the paper's linear function  F(x) = S*x + I  (Eq. 3).
+This module also provides the six functions F1..F6 used in the ablation of
+§4.8 / Figure 15 (F1..F4 increasing => interleave; F5, F6 decreasing => fail).
+
+Everything here is a pure function of JAX scalars/arrays so that it can be
+used inside `lax.scan` simulation loops and inside the Pallas CC-tick kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+AggressivenessFn = Callable[[Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearF:
+    """The paper's Eq. 3:  F(bytes_ratio) = S * bytes_ratio + I.
+
+    ``slope``/``intercept`` are tuned per congestion-control variant
+    (paper §4.1): Reno-WI (1.75, 0.25), Reno-MD (1, 1), CUBIC-WI (1.0, 0.5),
+    CUBIC-MD (0.8, 0.8), MLQCN (1.067, 0.267).
+    """
+
+    slope: float
+    intercept: float
+
+    def __call__(self, bytes_ratio: Array) -> Array:
+        return self.slope * bytes_ratio + self.intercept
+
+
+def linear(slope: float, intercept: float) -> LinearF:
+    return LinearF(slope, intercept)
+
+
+# ---------------------------------------------------------------------------
+# The six ablation functions of §4.8 (all share range [0.25, 2] on x in [0,1]).
+# ---------------------------------------------------------------------------
+
+def _f1(x: Array) -> Array:  # linear increasing (the default shape)
+    return 1.75 * x + 0.25
+
+
+def _f2(x: Array) -> Array:  # convex increasing
+    return 1.75 * x ** 2 + 0.25
+
+
+def _f3(x: Array) -> Array:  # inverse increasing
+    return 1.0 / (-3.5 * x + 4.0)
+
+
+def _f4(x: Array) -> Array:  # concave increasing
+    return -1.75 * x ** 2 + 3.5 * x + 0.25
+
+
+def _f5(x: Array) -> Array:  # linear DECREASING (cancels SRPT; must fail)
+    return -1.75 * x + 2.0
+
+
+def _f6(x: Array) -> Array:  # concave DECREASING (must fail)
+    return -1.75 * x ** 2 + 2.0
+
+
+def paper_functions() -> Dict[str, AggressivenessFn]:
+    """F1..F6 from §4.8 / Figure 15."""
+    return {"F1": _f1, "F2": _f2, "F3": _f3, "F4": _f4, "F5": _f5, "F6": _f6}
+
+
+_REGISTRY: Dict[str, AggressivenessFn] = dict(paper_functions())
+
+
+def make_fn(spec: str | AggressivenessFn, slope: float | None = None,
+            intercept: float | None = None) -> AggressivenessFn:
+    """Resolve an aggressiveness function.
+
+    ``spec`` may be a callable (used as-is), one of "F1".."F6", or "linear"
+    (requires slope/intercept).
+    """
+    if callable(spec):
+        return spec
+    if spec == "linear":
+        if slope is None or intercept is None:
+            raise ValueError("linear F requires slope and intercept")
+        return linear(slope, intercept)
+    if spec in _REGISTRY:
+        return _REGISTRY[spec]
+    raise ValueError(f"unknown aggressiveness function {spec!r}")
+
+
+def is_srpt_reinforcing(fn: AggressivenessFn, n: int = 256) -> bool:
+    """Check requirement (ii): non-negative derivative over [0, 1].
+
+    Used by property tests: increasing F => interleaves; decreasing => fails.
+    """
+    xs = jnp.linspace(0.0, 1.0, n)
+    ys = fn(xs)
+    return bool(jnp.all(jnp.diff(ys) >= -1e-7))

@@ -1,0 +1,8 @@
+"""Congestion-control algorithms augmented by MLTCP (paper §3.4).
+
+Each algorithm is a pure function over a unified per-flow state
+(`repro.core.mltcp.FlowCCState`), so that one vectorized update serves the
+netsim engine, the Pallas fused kernel oracle, and standalone tests.
+"""
+
+from repro.core.cc import reno, cubic, dcqcn  # noqa: F401

@@ -1,0 +1,83 @@
+"""DCQCN +/- MLTCP ("MLQCN", paper §3.4, Eqs. 12-15).
+
+DCQCN is the rate-based CC used in lossless RoCE fabrics [Zhu et al. 2015].
+Congestion Notification Packets (CNPs, derived from ECN marks) drive
+multiplicative decrease; timers drive recovery and additive increase.
+
+Rate increase (additive-increase stage):
+    default:  target_rate += R_AI                            (Eq. 12)
+    MLQCN-WI: target_rate += F(bytes_ratio) * R_AI           (Eq. 13)
+
+Rate decrease (on CNP):
+    default:  curr_rate = (1 - alpha/2) * curr_rate          (Eq. 14)
+    MLQCN-MD: curr_rate = F(bytes_ratio)*(1 - alpha/2)*curr_rate  (Eq. 15)
+
+alpha follows the DCQCN EWMA: on CNP  alpha <- (1-g)*alpha + g; it decays by
+(1-g) on an ``alpha_timer`` when no CNP arrives.  Recovery uses the standard
+staged scheme: the first ``fast_recovery_stages`` increase events halve the
+gap to target_rate; later stages additively raise target_rate (Eq. 12/13)
+before halving the gap.  Hyper-increase is omitted (the paper leaves DCQCN's
+other stages untouched and its NICs cap at line rate anyway); rates clip to
+[rate_min, line_rate].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cc.types import CCParams, Feedback, FlowCCState
+
+Array = jnp.ndarray
+
+
+def update(params: CCParams, state: FlowCCState, fb: Feedback,
+           f_wi: Array, f_md: Array) -> FlowCCState:
+    now = fb.now
+    # NICs honor at most one CNP per cnp_interval per flow (rate limiter).
+    cnp = fb.cnp & ((now - state.t_last_cnp) >= params.cnp_interval)
+
+    # ---------- multiplicative decrease on CNP (Eq. 15) ----------
+    alpha_on_cnp = (1.0 - params.dcqcn_g) * state.alpha + params.dcqcn_g
+    # a decrease step must not increase the rate: clip F*(1-a/2) at 1.
+    md_mult = jnp.minimum(f_md * (1.0 - state.alpha / 2.0), 1.0)
+    rate_cut = jnp.clip(md_mult * state.rate_cur,
+                        params.rate_min, params.line_rate)
+
+    # ---------- alpha decay when quiet ----------
+    alpha_timer_fired = (now - state.t_last_alpha) >= params.alpha_timer
+    alpha_decayed = jnp.where(alpha_timer_fired,
+                              (1.0 - params.dcqcn_g) * state.alpha, state.alpha)
+
+    # ---------- staged rate increase ----------
+    inc_timer_fired = (now - state.t_last_inc) >= params.inc_timer
+    stage = state.inc_stage + inc_timer_fired.astype(jnp.int32)
+    in_ai = stage > params.fast_recovery_stages
+    # Eq. 13: additive increase on target rate, scaled by F in the AI stage.
+    tgt_inc = jnp.where(inc_timer_fired & in_ai,
+                        state.rate_target + f_wi * params.rate_ai,
+                        state.rate_target)
+    tgt_inc = jnp.minimum(tgt_inc, params.line_rate)
+    # The increase *step* toward target is DCQCN's bisection recovery; MLTCP's
+    # principle (Eq. 2: scale every increase step by F) applies here too —
+    # under persistent CNPs flows rarely leave fast recovery, so scaling only
+    # R_AI would leave no favoritism signal (hardware-adaptation note,
+    # DESIGN.md §2). F=1 recovers the default algorithm exactly.
+    step = jnp.minimum(f_wi, 2.0) * 0.5 * (tgt_inc - state.rate_cur)
+    rate_inc = jnp.where(inc_timer_fired, state.rate_cur + step, state.rate_cur)
+
+    # ---------- merge: CNP path wins ----------
+    new_rate = jnp.where(cnp, rate_cut, rate_inc)
+    new_target = jnp.where(cnp, state.rate_cur, tgt_inc)
+    new_alpha = jnp.where(cnp, alpha_on_cnp, alpha_decayed)
+    new_stage = jnp.where(cnp, jnp.zeros_like(stage), stage)
+    new_t_inc = jnp.where(cnp | inc_timer_fired, now, state.t_last_inc)
+    new_t_alpha = jnp.where(cnp | alpha_timer_fired, now, state.t_last_alpha)
+
+    return state._replace(
+        rate_cur=jnp.clip(new_rate, params.rate_min, params.line_rate),
+        rate_target=jnp.clip(new_target, params.rate_min, params.line_rate),
+        alpha=jnp.clip(new_alpha, 0.0, 1.0),
+        inc_stage=new_stage,
+        t_last_cnp=jnp.where(cnp, now, state.t_last_cnp),
+        t_last_inc=new_t_inc,
+        t_last_alpha=new_t_alpha,
+    )

@@ -1,0 +1,60 @@
+"""TCP Reno +/- MLTCP (paper §3.4, Eqs. 4-7).
+
+Additive increase (per ack batch):
+    default:  cwnd += num_acks / cwnd                       (Eq. 4)
+    MLTCP-WI: cwnd += F(bytes_ratio) * num_acks / cwnd      (Eq. 5)
+
+Multiplicative decrease (per loss event, at most once per RTT):
+    default:  cwnd  = 0.5 * cwnd                            (Eq. 6)
+    MLTCP-MD: cwnd  = F(bytes_ratio) * 0.5 * cwnd           (Eq. 7)
+
+Slow start is untouched (§3.4: "MLTCP does not make any changes to any other
+parts of the congestion control algorithm").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cc.types import CCParams, Feedback, FlowCCState, Variant
+
+Array = jnp.ndarray
+
+
+def update(params: CCParams, state: FlowCCState, fb: Feedback,
+           f_wi: Array, f_md: Array) -> FlowCCState:
+    """One tick of Reno. ``f_wi``/``f_md`` are F(bytes_ratio) per flow, with
+    the non-selected variant already forced to 1.0 by the caller."""
+    cwnd = state.cwnd
+
+    # ---- increase path (on acks) ----
+    in_ss = cwnd < state.ssthresh
+    grow_ss = fb.num_acks                                  # slow start: +1/ack
+    grow_ca = f_wi * fb.num_acks / jnp.maximum(cwnd, 1e-6)  # Eq. 5
+    cwnd_inc = cwnd + jnp.where(in_ss, grow_ss, grow_ca)
+
+    # ---- decrease path (on loss events, once per RTT via cooldown) ----
+    can_cut = state.cooldown <= 0.0
+    do_cut = fb.loss & can_cut
+    # Eq. 7, with F*beta clipped at 1 (a decrease never increases cwnd).
+    cwnd_cut = jnp.maximum(jnp.minimum(f_md * params.reno_beta, 1.0) * cwnd,
+                           params.min_cwnd)
+
+    new_cwnd = jnp.where(do_cut, cwnd_cut, cwnd_inc)
+    new_ssthresh = jnp.where(do_cut, jnp.maximum(cwnd_cut, 2.0), state.ssthresh)
+    new_cooldown = jnp.where(do_cut, params.rtt,
+                             jnp.maximum(state.cooldown - params.tick_dt, 0.0))
+
+    return state._replace(cwnd=new_cwnd, ssthresh=new_ssthresh,
+                          cooldown=new_cooldown)
+
+
+def split_f(params: CCParams, f_vals: Array) -> tuple[Array, Array]:
+    """Route F(bytes_ratio) to the WI and/or MD hook per the variant."""
+    one = jnp.ones_like(f_vals)
+    if params.variant == Variant.OFF:
+        return one, one
+    if params.variant == Variant.WI:
+        return f_vals, one
+    if params.variant == Variant.MD:
+        return one, f_vals
+    return f_vals, f_vals  # BOTH

@@ -1,0 +1,115 @@
+"""Shared types for the congestion-control layer.
+
+One unified per-flow state struct carries the fields of all three algorithms
+(Reno / CUBIC / DCQCN); a simulation instantiates exactly one algorithm
+(matching the paper's testbed, where the whole fabric runs one CC variant),
+so unused fields cost a few floats per flow and keep every update branch-free
+and fully vectorized — the property that lets the netsim engine `lax.scan`
+over millions of ticks and the Pallas kernel fuse the whole tick.
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class Algo(enum.IntEnum):
+    RENO = 0
+    CUBIC = 1
+    DCQCN = 2
+
+
+class Variant(enum.IntEnum):
+    """Where MLTCP's F scales the algorithm (paper §3.3 has two mechanisms)."""
+
+    OFF = 0   # default congestion control (baseline)
+    WI = 1    # scale the window/rate increase step        (Eqs. 5, 9, 13)
+    MD = 2    # scale the multiplicative decrease step     (Eqs. 7, 11, 15)
+    BOTH = 3  # both (paper: either alone suffices; kept for ablations)
+
+
+class CCParams(NamedTuple):
+    """Static parameters (python floats — baked into the jitted program)."""
+
+    algo: int = int(Algo.RENO)
+    variant: int = int(Variant.WI)
+    mss: float = 1500.0                # bytes per packet (paper: MTU 1500)
+    rtt: float = 100e-6                # base round-trip time (s)
+    tick_dt: float = 20e-6             # simulator tick (s); used for timers
+    min_cwnd: float = 1.0              # packets
+    init_cwnd: float = 10.0            # packets
+    init_ssthresh: float = 1e9
+    # --- CUBIC ---
+    cubic_c: float = 0.4               # standard CUBIC C (units: pkts/s^3)
+    cubic_beta: float = 0.7            # standard CUBIC multiplicative decrease
+    cubic_scale: float = 1e10          # paper §4.1 scales bic_scale by 1e10
+                                       # so CUBIC reacts at ~100 us RTTs
+    # --- Reno ---
+    reno_beta: float = 0.5             # Eq. 6
+    # --- DCQCN ---
+    line_rate: float = 50e9 / 8        # bytes/s (50 Gbps NICs in the paper)
+    rate_ai: float = 5e9 / 8           # R_AI bytes/s per additive-increase
+                                       # step (ConnectX-class rp_ai_rate)
+    rate_min: float = 1e6              # bytes/s floor
+    dcqcn_g: float = 1.0 / 16.0        # alpha EWMA gain
+    alpha_timer: float = 55e-6         # alpha-decay timer T_alpha (s)
+    inc_timer: float = 55e-6           # rate-increase timer (s)
+    fast_recovery_stages: int = 5      # stages before additive increase
+    cnp_interval: float = 50e-6        # min time between honored CNPs (s)
+
+
+class FlowCCState(NamedTuple):
+    """Per-flow congestion-control state (arrays of shape [n_flows])."""
+
+    cwnd: Array            # packets (window-based algos)
+    ssthresh: Array        # packets
+    cooldown: Array        # seconds until loss events are honored again
+    # CUBIC
+    w_max: Array           # packets at last decrease
+    epoch_start: Array     # time of last decrease (s)
+    # DCQCN
+    rate_cur: Array        # bytes/s
+    rate_target: Array     # bytes/s
+    alpha: Array
+    t_last_cnp: Array
+    t_last_inc: Array
+    t_last_alpha: Array
+    inc_stage: Array       # int32
+
+
+class Feedback(NamedTuple):
+    """Per-tick, per-flow feedback (already delayed by RTT by the caller)."""
+
+    num_acks: Array        # delivered bytes / MSS during the tick
+    loss: Array            # bool: loss event signal (drop-based algos)
+    cnp: Array             # bool: ECN/CNP congestion signal (DCQCN)
+    now: Array             # scalar time (s)
+
+
+def init_flow_state(n: int, params: CCParams, dtype=jnp.float32) -> FlowCCState:
+    z = jnp.zeros((n,), dtype)
+    return FlowCCState(
+        cwnd=jnp.full((n,), params.init_cwnd, dtype),
+        ssthresh=jnp.full((n,), params.init_ssthresh, dtype),
+        cooldown=z,
+        w_max=jnp.full((n,), params.init_cwnd, dtype),
+        epoch_start=z,
+        rate_cur=jnp.full((n,), params.line_rate, dtype),
+        rate_target=jnp.full((n,), params.line_rate, dtype),
+        alpha=jnp.ones((n,), dtype),
+        t_last_cnp=z,
+        t_last_inc=z,
+        t_last_alpha=z,
+        inc_stage=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def send_rate(params: CCParams, state: FlowCCState) -> Array:
+    """Instantaneous send rate in bytes/s implied by the CC state."""
+    if params.algo == Algo.DCQCN:
+        return state.rate_cur
+    return state.cwnd * params.mss / params.rtt

@@ -1,0 +1,151 @@
+"""MLTCP — the composable protocol module (paper §3).
+
+Ties together:
+  * Algorithm 1 (iteration-boundary detection / bytes_ratio tracking),
+  * the job-favoritism policy (§3.2),
+  * the bandwidth-aggressiveness function F (§3.3),
+  * one of the base congestion-control algorithms (§3.4).
+
+`cc_tick` is the single vectorized update the netsim engine calls each tick;
+it is also the pure-jnp oracle (`kernels/ref.py`) for the fused Pallas kernel
+`kernels/mltcp_step.py`.
+
+Baselines supported through the same entry point:
+  * ``variant=OFF``            — default Reno/CUBIC/DCQCN.
+  * ``static_factors=array``   — the Static scheme of [67]: a *constant*
+    per-flow unfairness factor replaces F(bytes_ratio) (no dynamics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import aggressiveness, favoritism as favoritism_mod
+from repro.core import iteration
+from repro.core.cc import cubic, dcqcn, reno
+from repro.core.cc.types import (  # re-exported for convenience
+    Algo,
+    CCParams,
+    Feedback,
+    FlowCCState,
+    Variant,
+    init_flow_state,
+    send_rate,
+)
+
+Array = jnp.ndarray
+
+__all__ = [
+    "Algo", "Variant", "CCParams", "FlowCCState", "Feedback",
+    "MLTCPConfig", "MLTCPState", "init_state", "cc_tick",
+    "init_flow_state", "send_rate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLTCPConfig:
+    """Static protocol configuration for one simulation/deployment."""
+
+    cc: CCParams = CCParams()
+    f_spec: str = "linear"              # "linear" | "F1".."F6" | callable
+    slope: float = 1.75                 # S (paper §4.1 defaults for Reno-WI)
+    intercept: float = 0.25             # I
+    favoritism: str = "largest_data_sent"
+    aggregate_by_job: bool = True       # paper §4.1: aggregate sockets per job
+    # Algorithm 1 parameters
+    init_comm_gap: float = 1e-3         # INIT_COMM_GAP (s)
+    g: float = 0.75
+    gamma: float = 0.5
+
+    def f(self) -> aggressiveness.AggressivenessFn:
+        return aggressiveness.make_fn(self.f_spec, self.slope, self.intercept)
+
+
+class MLTCPState(NamedTuple):
+    cc: FlowCCState
+    det: iteration.IterDetectState
+
+
+def init_state(n_flows: int, cfg: MLTCPConfig) -> MLTCPState:
+    det_params = iteration.IterDetectParams(
+        total_bytes=jnp.ones((n_flows,)),  # engine overwrites via params arg
+        init_comm_gap=jnp.asarray(cfg.init_comm_gap),
+        g=cfg.g, gamma=cfg.gamma, mtu=cfg.cc.mss,
+    )
+    return MLTCPState(cc=init_flow_state(n_flows, cfg.cc),
+                      det=iteration.init_state(n_flows, det_params))
+
+
+_CC_UPDATES = {
+    int(Algo.RENO): reno.update,
+    int(Algo.CUBIC): cubic.update,
+    int(Algo.DCQCN): dcqcn.update,
+}
+
+
+def _favoritism_score(cfg: MLTCPConfig, det: iteration.IterDetectState,
+                      fb: Feedback, comm_elapsed: Optional[Array],
+                      est_finish: Optional[Array]) -> Array:
+    obs = favoritism_mod.FlowObservables(
+        bytes_ratio=det.bytes_ratio,
+        iter_start_ago=(comm_elapsed if comm_elapsed is not None
+                        else jnp.zeros_like(det.bytes_ratio)),
+        est_finish_in=(est_finish if est_finish is not None
+                       else 1.0 - det.bytes_ratio),
+    )
+    return favoritism_mod.get_policy(cfg.favoritism)(obs)
+
+
+def cc_tick(cfg: MLTCPConfig,
+            state: MLTCPState,
+            fb: Feedback,
+            total_bytes: Array,
+            flow_to_job: Optional[Array] = None,
+            n_jobs: int = 0,
+            static_factors: Optional[Array] = None,
+            comm_elapsed: Optional[Array] = None,
+            est_finish: Optional[Array] = None) -> tuple[MLTCPState, Array]:
+    """One protocol tick for all flows.
+
+    Args:
+      fb: RTT-delayed feedback (acks / loss / CNP signals) for this tick.
+      total_bytes: per-flow bytes per training iteration (Algorithm 1 input).
+      flow_to_job / n_jobs: socket→job map for per-job statistics aggregation.
+      static_factors: if given, the Static [67] baseline — per-flow constant
+        replaces F(bytes_ratio).
+    Returns:
+      (new_state, send_rate_bytes_per_s)
+    """
+    det_params = iteration.IterDetectParams(
+        total_bytes=total_bytes,
+        init_comm_gap=jnp.asarray(cfg.init_comm_gap),
+        g=cfg.g, gamma=cfg.gamma, mtu=cfg.cc.mss,
+    )
+
+    # --- Algorithm 1: update bytes_sent / bytes_ratio / boundary detection ---
+    job_bytes = None
+    if cfg.aggregate_by_job and flow_to_job is not None and n_jobs > 0:
+        per_flow_bytes = state.det.bytes_sent + fb.num_acks * cfg.cc.mss
+        job_tot = jnp.zeros((n_jobs,), per_flow_bytes.dtype
+                            ).at[flow_to_job].add(per_flow_bytes)
+        job_bytes = job_tot[flow_to_job]
+    det = iteration.update_mltcp_params(state.det, det_params, fb.num_acks,
+                                        fb.now, job_bytes_sent=job_bytes)
+
+    # --- favoritism score -> F values (or Static constants) ---
+    if static_factors is not None:
+        f_vals = static_factors
+    elif cfg.cc.variant == int(Variant.OFF):
+        f_vals = jnp.ones_like(det.bytes_ratio)
+    else:
+        score = _favoritism_score(cfg, det, fb, comm_elapsed, est_finish)
+        f_vals = cfg.f()(score)
+
+    f_wi, f_md = reno.split_f(cfg.cc, f_vals)
+
+    # --- base congestion-control update with MLTCP scaling ---
+    cc_state = _CC_UPDATES[int(cfg.cc.algo)](cfg.cc, state.cc, fb, f_wi, f_md)
+
+    return MLTCPState(cc=cc_state, det=det), send_rate(cfg.cc, cc_state)

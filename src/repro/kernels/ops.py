@@ -1,0 +1,240 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+  flash_attention  — pads to block/lane multiples, custom_vjp whose backward
+                     recomputes through the jnp oracle (standard recompute);
+  rg_lru           — same pattern for the linear-recurrence scan;
+  mltcp_cc_tick    — drop-in replacement for repro.core.cc_tick: packs the
+                     protocol state into [R, 128] lanes, runs the fused tick
+                     kernel, unpacks; falls back to the jnp path for options
+                     outside the kernel's static specialization.
+
+``interpret`` defaults to True: this container is CPU-only, and interpret
+mode executes the kernel body exactly as the TPU grid would (the brief's
+validation mode). On real TPUs pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mltcp as core
+from repro.kernels import flash_attention as fa
+from repro.kernels import mltcp_step as ms
+from repro.kernels import ref
+from repro.kernels import rg_lru as rl
+
+Array = jnp.ndarray
+
+INTERPRET = True  # CPU container default; set False on TPU
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    window: int = 0, softcap: Optional[float] = None
+                    ) -> Array:
+    return _flash_fwd_impl(q, k, v, causal, window, softcap)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, softcap):
+    t, s = q.shape[1], k.shape[1]
+    bq = min(fa.DEFAULT_BLOCK_Q, 1 << max((t - 1).bit_length(), 7))
+    bk = min(fa.DEFAULT_BLOCK_K, 1 << max((s - 1).bit_length(), 7))
+    qp, _ = _pad_to(q, 1, bq)
+    kp, _ = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    qp, pad_d = _pad_to(qp, 3, 128)
+    kp, _ = _pad_to(kp, 3, 128)
+    vp, _ = _pad_to(vp, 3, 128)
+    out = fa.flash_attention_fwd(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        s_real=s, scale=1.0 / (q.shape[3] ** 0.5),
+        block_q=bq, block_k=bk, interpret=INTERPRET)
+    if pad_d:
+        out = out[..., : q.shape[3]]
+    if out.shape[1] != t:
+        out = out[:, :t]
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, softcap):
+    return _flash_fwd_impl(q, k, v, causal, window, softcap), (q, k, v)
+
+
+def _flash_vjp_bwd(causal, window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.ref_attention(
+        q_, k_, v_, causal=causal, window=window, softcap=softcap), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def rg_lru(a: Array, b: Array) -> Array:
+    return _rg_lru_impl(a, b)
+
+
+def _rg_lru_impl(a, b):
+    ap, pad = _pad_to(a, 2, rl.BLOCK_D)
+    bp, _ = _pad_to(b, 2, rl.BLOCK_D)
+    out = rl.rg_lru_scan(ap, bp, interpret=INTERPRET)
+    return out[..., : a.shape[2]] if pad else out
+
+
+def _rg_lru_vjp_fwd(a, b):
+    return _rg_lru_impl(a, b), (a, b)
+
+
+def _rg_lru_vjp_bwd(res, g):
+    a, b = res
+    _, vjp = jax.vjp(ref.ref_rg_lru, a, b)
+    return vjp(g)
+
+
+rg_lru.defvjp(_rg_lru_vjp_fwd, _rg_lru_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused protocol tick
+# ---------------------------------------------------------------------------
+
+_ROW = ms.LANES * ms.SUBLANES
+
+
+def _pack(x, n_pad, fill=0.0, dtype=jnp.float32):
+    x = jnp.asarray(x, dtype)
+    x = jnp.pad(x, (0, n_pad - x.shape[0]), constant_values=fill)
+    return x.reshape(n_pad // ms.LANES, ms.LANES)
+
+
+def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
+                  fb: core.Feedback, total_bytes: Array,
+                  flow_to_job: Optional[Array] = None, n_jobs: int = 0,
+                  static_factors: Optional[Array] = None,
+                  comm_elapsed: Optional[Array] = None,
+                  est_finish: Optional[Array] = None
+                  ) -> tuple[core.MLTCPState, Array]:
+    """core.cc_tick drop-in backed by the fused Pallas kernel."""
+    kernel_ok = (static_factors is None
+                 and cfg.favoritism == "largest_data_sent"
+                 and cfg.f_spec == "linear")
+    if not kernel_ok:
+        return core.cc_tick(cfg, state, fb, total_bytes,
+                            flow_to_job=flow_to_job, n_jobs=n_jobs,
+                            static_factors=static_factors,
+                            comm_elapsed=comm_elapsed,
+                            est_finish=est_finish)
+
+    n = state.cc.cwnd.shape[0]
+    n_pad = -(-n // _ROW) * _ROW
+
+    # job-aggregated numerator (paper §4.1: stats aggregated per job)
+    per_flow_bytes = state.det.bytes_sent + fb.num_acks * cfg.cc.mss
+    if cfg.aggregate_by_job and flow_to_job is not None and n_jobs > 0:
+        job_tot = jnp.zeros((n_jobs,), per_flow_bytes.dtype
+                            ).at[flow_to_job].add(per_flow_bytes)
+        job_numer = job_tot[flow_to_job]
+        aggregate = True
+    else:
+        job_numer = per_flow_bytes
+        aggregate = False
+
+    cc = cfg.cc
+    p = {
+        "algo": int(cc.algo), "variant": int(cc.variant),
+        "mss": cc.mss, "rtt": cc.rtt, "tick_dt": cc.tick_dt,
+        "min_cwnd": cc.min_cwnd, "reno_beta": cc.reno_beta,
+        "cubic_c": cc.cubic_c, "cubic_beta": cc.cubic_beta,
+        "cubic_scale": cc.cubic_scale, "line_rate": cc.line_rate,
+        "rate_ai": cc.rate_ai, "rate_min": cc.rate_min,
+        "dcqcn_g": cc.dcqcn_g, "alpha_timer": cc.alpha_timer,
+        "inc_timer": cc.inc_timer, "cnp_interval": cc.cnp_interval,
+        "fast_recovery_stages": cc.fast_recovery_stages,
+        "slope": cfg.slope, "intercept": cfg.intercept,
+        "g": cfg.g, "gamma": cfg.gamma, "init_comm_gap": cfg.init_comm_gap,
+        "aggregate": aggregate,
+    }
+
+    d, c = state.det, state.cc
+    now_arr = jnp.broadcast_to(jnp.asarray(fb.now, jnp.float32), (n,))
+    arrays = {
+        "bytes_sent": _pack(d.bytes_sent, n_pad),
+        "prev_ack_tstamp": _pack(d.prev_ack_tstamp, n_pad),
+        "iter_gap": _pack(d.iter_gap, n_pad, fill=1.0),
+        "max_gap": _pack(d.max_gap, n_pad, fill=1.0),
+        "cwnd": _pack(c.cwnd, n_pad, fill=1.0),
+        "ssthresh": _pack(c.ssthresh, n_pad, fill=1.0),
+        "cooldown": _pack(c.cooldown, n_pad),
+        "w_max": _pack(c.w_max, n_pad, fill=1.0),
+        "epoch_start": _pack(c.epoch_start, n_pad),
+        "rate_cur": _pack(c.rate_cur, n_pad, fill=cc.rate_min),
+        "rate_target": _pack(c.rate_target, n_pad, fill=cc.rate_min),
+        "alpha": _pack(c.alpha, n_pad),
+        "t_last_cnp": _pack(c.t_last_cnp, n_pad),
+        "t_last_inc": _pack(c.t_last_inc, n_pad),
+        "t_last_alpha": _pack(c.t_last_alpha, n_pad),
+        "stage": _pack(c.inc_stage, n_pad, dtype=jnp.int32),
+        "prev_ratio": _pack(d.bytes_ratio, n_pad),
+        "num_acks": _pack(fb.num_acks, n_pad),
+        "loss": _pack(fb.loss, n_pad),
+        "cnp": _pack(fb.cnp, n_pad),
+        "now": _pack(now_arr, n_pad),
+        "total_bytes": _pack(total_bytes, n_pad, fill=1.0),
+        "job_numer": _pack(job_numer, n_pad),
+    }
+    out = ms.mltcp_tick_arrays(p, arrays, interpret=INTERPRET)
+
+    def unpack(x, dtype=jnp.float32):
+        return x.reshape(-1)[:n].astype(dtype)
+
+    # boundary counter (metrics-only) maintained outside the kernel
+    has_ack = fb.num_acks > 0
+    boundary = has_ack & ((fb.now - d.prev_ack_tstamp) > cfg.g * d.iter_gap)
+
+    det = core.MLTCPState(
+        cc=state.cc, det=state.det).det._replace(
+        bytes_sent=unpack(out["bytes_sent"]),
+        bytes_ratio=unpack(out["ratio"]),
+        prev_ack_tstamp=unpack(out["prev_ack_tstamp"]),
+        iter_gap=unpack(out["iter_gap"]),
+        max_gap=unpack(out["max_gap"]),
+        n_boundaries=d.n_boundaries + boundary.astype(jnp.int32),
+    )
+    ccs = state.cc._replace(
+        cwnd=unpack(out["cwnd"]),
+        ssthresh=unpack(out["ssthresh"]),
+        cooldown=unpack(out["cooldown"]),
+        w_max=unpack(out["w_max"]),
+        epoch_start=unpack(out["epoch_start"]),
+        rate_cur=unpack(out["rate_cur"]),
+        rate_target=unpack(out["rate_target"]),
+        alpha=unpack(out["alpha"]),
+        t_last_cnp=unpack(out["t_last_cnp"]),
+        t_last_inc=unpack(out["t_last_inc"]),
+        t_last_alpha=unpack(out["t_last_alpha"]),
+        inc_stage=unpack(out["stage"], jnp.int32),
+    )
+    rate = unpack(out["rate"])
+    return core.MLTCPState(cc=ccs, det=det), rate

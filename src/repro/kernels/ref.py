@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+  ref_attention  <-> flash_attention.flash_attention_fwd
+  ref_rg_lru     <-> rg_lru.rg_lru_scan
+  ref_cc_tick    <-> mltcp_step (== repro.core.cc_tick, the engine's own
+                     update — the kernel must match the protocol exactly)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mltcp import cc_tick as ref_cc_tick  # noqa: F401
+
+Array = jnp.ndarray
+
+
+def ref_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0, softcap: float | None = None) -> Array:
+    """Dense GQA attention. q: [B,T,H,D]; k/v: [B,S,K,D]."""
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    g = h // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bthd,bshd->bths", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(t)
+    kpos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bths,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_rg_lru(a: Array, b: Array, h0: Array | None = None) -> Array:
+    """h_t = a_t * h_{t-1} + b_t via associative scan. a/b: [B,T,D]."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first initialization).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell and both production meshes,
+lower + compile the real train/prefill/decode step with ShapeDtypeStruct
+stand-ins (no allocation), then record:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits),
+  * cost_analysis()    — FLOPs / bytes for the roofline,
+  * the collective schedule parsed from the compiled HLO.
+
+Roofline extraction additionally lowers unrolled L=1 / L=2 variants to solve
+cost(L) = stem + L*body exactly (XLA counts a scanned while body once — see
+DESIGN.md §4); that happens in repro.roofline.analysis, driven from here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.roofline.hlo import collective_bytes_from_text
+from repro.train import (
+    ShardingRules,
+    TrainHyper,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    param_pspecs,
+)
+from repro.train.sharding import auto_pspec
+
+SERVE_DTYPE = jnp.bfloat16
+
+# Per-arch training hyper-parameters for the production cells: bf16 params
+# everywhere (mixed precision); the large models additionally use bf16
+# optimizer moments (DeepSeek-V3-style) and gradient accumulation so the
+# activation carry fits 16 GB/chip. Recorded in EXPERIMENTS.md §Dry-run.
+from repro.optim import AdamWConfig  # noqa: E402
+
+_BF16_OPT = AdamWConfig(state_dtype="bfloat16")
+_DEFAULT_HYPER = TrainHyper(param_dtype="bfloat16", microbatches=2)
+TRAIN_HYPER_OVERRIDES = {
+    "llama4-maverick-400b-a17b": TrainHyper(param_dtype="bfloat16",
+                                            opt=_BF16_OPT, microbatches=8),
+    "gemma2-27b": TrainHyper(param_dtype="bfloat16", opt=_BF16_OPT,
+                             microbatches=8),
+    "deepseek-moe-16b": TrainHyper(param_dtype="bfloat16", opt=_BF16_OPT,
+                                   microbatches=8),
+    "recurrentgemma-2b": TrainHyper(param_dtype="bfloat16", microbatches=4),
+    "qwen1.5-4b": TrainHyper(param_dtype="bfloat16", microbatches=4),
+    "internvl2-1b": TrainHyper(param_dtype="bfloat16", microbatches=4),
+}
+# big models also shard weights/optimizer over the data axes when training
+FSDP_TRAIN_ARCHS = {"llama4-maverick-400b-a17b", "gemma2-27b",
+                    "deepseek-moe-16b"}
+
+
+def train_hyper_for(arch: str) -> TrainHyper:
+    return TRAIN_HYPER_OVERRIDES.get(arch, _DEFAULT_HYPER)
+
+
+def _data_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# Hillclimb winners adopted as production defaults (EXPERIMENTS.md §Perf):
+#  * sequence-parallel attention scores for archs whose head count doesn't
+#    divide the 16-way model axis (A1: 7.5x on the memory term) — applied
+#    to full-sequence cells only;
+#  * sequence-sharded KV caches for decode cells (B2: collective term
+#    -2467x) — context-parallel decode;
+#  * FSDP weight sharding for the MoE serving cells (fits 16 GB/chip).
+SEQ_SHARD_ARCHS = {"qwen1.5-4b", "llama4-maverick-400b-a17b",
+                   "internvl2-1b"}
+FSDP_SERVE_ARCHS = {"llama4-maverick-400b-a17b", "deepseek-moe-16b"}
+
+
+def default_rules_for(arch: str, shape_kind: str, mesh) -> ShardingRules:
+    dp = _data_axes(mesh)
+    if shape_kind == "decode":
+        return ShardingRules(data_axes=dp, decode_cache_seq_shard=True,
+                             fsdp=arch in FSDP_SERVE_ARCHS)
+    if shape_kind == "prefill":
+        return ShardingRules(data_axes=dp, fsdp=arch in FSDP_SERVE_ARCHS)
+    return ShardingRules(data_axes=dp, fsdp=arch in FSDP_TRAIN_ARCHS)
+
+
+def _batch_specs(cfg: ModelConfig, b: int, s: int, mesh, microbatches: int = 1,
+                 rules=None):
+    """ShapeDtypeStructs + PartitionSpecs for one batch. With gradient
+    accumulation the leading microbatch axis is unsharded: [mb, b/mb, ...]."""
+    dp = rules.data_axes if rules is not None else _data_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    mb = microbatches
+    bb = b // mb
+    bspec = dp if bb % dsize == 0 else None
+    lead = (mb,) if mb > 1 else ()
+    lspec = (None,) if mb > 1 else ()
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(lead + shape, dtype)
+
+    batch = {"tokens": sds((bb, s), jnp.int32)}
+    spec = {"tokens": P(*lspec, bspec, None)}
+    if cfg.family == "audio":
+        t_enc = max(s // cfg.enc_seq_divisor, 8)
+        batch["frames"] = sds((bb, t_enc, cfg.d_model), jnp.float32)
+        spec["frames"] = P(*lspec, bspec, None, None)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((bb, cfg.vision_tokens, cfg.vit_dim),
+                               jnp.float32)
+        spec["patches"] = P(*lspec, bspec, None, None)
+        # vision tokens prepend to the sequence; keep total = s
+        batch["tokens"] = sds((bb, s - cfg.vision_tokens), jnp.int32)
+    return batch, spec
+
+
+def _shardings(tree_spec, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh,
+               rules: ShardingRules | None = None, unroll: bool = False,
+               hyper_override: TrainHyper | None = None):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings, donate)."""
+    import dataclasses as _dc
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    rules = rules or ShardingRules(data_axes=_data_axes(mesh))
+
+    if shape.kind == "train":
+        hyper = hyper_override or train_hyper_for(cfg.name)
+        if unroll:
+            hyper = _dc.replace(hyper, unroll=True)
+        step = make_train_step(cfg, hyper)
+        state_shape = jax.eval_shape(
+            lambda k: init_train_state(cfg, hyper, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspecs = param_pspecs(cfg, state_shape.params, mesh, rules)
+        state_spec = state_shape._replace(
+            params=pspecs,
+            opt=state_shape.opt._replace(step=P(), m=pspecs, v=pspecs),
+            residual=None, step=P())
+        batch, bspec = _batch_specs(cfg, b, s, mesh,
+                                    microbatches=hyper.microbatches,
+                                    rules=rules)
+        state_sh = _shardings(jax.tree.map(lambda x: x, state_spec), mesh)
+        in_sh = (state_sh, _shardings(bspec, mesh))
+        metrics_sh = jax.eval_shape(step, state_shape, batch)[1]
+        out_sh = (state_sh, jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), metrics_sh))
+        return step, (state_shape, batch), in_sh, out_sh, (0,)
+
+    # --- serving cells use bf16 params ---
+    params_shape = jax.eval_shape(lambda k: api.init_params(cfg, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+    params_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, SERVE_DTYPE), params_shape)
+    pspecs = param_pspecs(cfg, params_shape, mesh, rules)
+    psh = _shardings(pspecs, mesh)
+
+    stacked = {"groups", "enc", "dec", "self", "cross"}
+
+    def cache_pspecs(cache_shape):
+        def one(path, leaf):
+            names = [str(getattr(e, "key", "")) for e in path]
+            is_stacked = any(n in stacked for n in names)
+            nd = len(leaf.shape) - (1 if is_stacked else 0)
+            if (rules is not None and rules.decode_cache_seq_shard
+                    and nd == 4 and names[-1] in ("k", "v")):
+                # [B, S, K, dh]: sequence-sharded KV (context parallelism),
+                # axis by axis only where the dim divides the mesh axes
+                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                dsize = 1
+                for a in rules.data_axes:
+                    dsize *= sizes.get(a, 1)
+                shp = leaf.shape[1:] if is_stacked else leaf.shape
+                bspec = rules.data_axes if shp[0] % dsize == 0 else None
+                sspec = "model" if shp[1] % sizes.get("model", 1) == 0 \
+                    else None
+                spec = (bspec, sspec, None, None)
+                if is_stacked:
+                    spec = (None,) + spec
+                return P(*spec)
+            return auto_pspec(leaf.shape, mesh, rules, stacked=is_stacked)
+        return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=s, unroll=unroll)
+        batch, bspec = _batch_specs(cfg, b, s, mesh)
+        out_shape = jax.eval_shape(step, params_shape, batch)
+        out_sh = (NamedSharding(mesh, P(None)),
+                  _shardings(cache_pspecs(out_shape[1]), mesh))
+        return (step, (params_shape, batch),
+                (psh, _shardings(bspec, mesh)), out_sh, ())
+
+    # decode: one new token against a seq_len cache
+    step = make_decode_step(cfg, unroll=unroll)
+    cache_shape = jax.eval_shape(
+        lambda: api.init_cache(cfg, b, s, SERVE_DTYPE))
+    csh = _shardings(cache_pspecs(cache_shape), mesh)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    in_sh = (psh, csh, NamedSharding(mesh, P(None)), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(None)), csh)
+    return (step, (params_shape, cache_shape, token, index), in_sh, out_sh,
+            (1,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: ShardingRules | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    skip = shape_skip_reason(cfg, shape_name)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    shape_kind = SHAPES[shape_name].kind
+    if rules is None:
+        rules = default_rules_for(arch, shape_kind, mesh)
+    from repro.models import attention as _attn
+    prev_seq = _attn.SEQ_SHARD_AXIS
+    if arch in SEQ_SHARD_ARCHS and shape_kind in ("train", "prefill"):
+        _attn.SEQ_SHARD_AXIS = "model"
+    try:
+        fn, args, in_sh, out_sh, donate = build_cell(cfg, shape_name, mesh,
+                                                     rules)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        txt = compiled.as_text()
+        colls = collective_bytes_from_text(txt)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": ca.get("flops", 0.0),
+            "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.temp_size_in_bytes),
+            "collectives": colls,
+        })
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: "
+                  f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+                  f"flops/dev={ca.get('flops', 0):.3g} "
+                  f"colls={ {k: round(v/2**20, 1) for k, v in colls['bytes_by_kind'].items()} }MiB "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: FAILED {rec['error']}")
+    finally:
+        _attn.SEQ_SHARD_AXIS = prev_seq
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                records.append(run_cell(arch, shape, mp))
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} failed")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print("wrote", args.out)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definition.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before *any* jax
+initialization, while smoke tests and benchmarks must see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the global batch."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Tiny mesh for CI-scale sharding tests (requires >= n_data*n_model
+    host devices, e.g. via --xla_force_host_platform_device_count=8)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

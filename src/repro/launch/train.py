@@ -1,0 +1,94 @@
+"""Training launcher.
+
+On this CPU container the ``smoke`` preset trains a reduced same-family
+config end-to-end (real data pipeline, AdamW, checkpointing, restart); the
+``full`` preset builds the production sharded step for the real config (the
+path the multi-pod dry-run exercises) — launchable unchanged on a pod.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --resume ...
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig, make_batch_iterator
+from repro.checkpoint import CheckpointManager
+from repro.train import TrainHyper, init_train_state, make_train_step
+
+
+def train(arch: str, steps: int = 100, seq_len: int = 128, batch: int = 8,
+          ckpt_dir: str | None = None, resume: bool = False,
+          ckpt_every: int = 50, preset: str = "smoke", seed: int = 0,
+          compression: str = "none", log_every: int = 10) -> dict:
+    cfg = get_config(arch)
+    if preset == "smoke":
+        cfg = cfg.scaled_down()
+    from repro.optim import CompressionConfig
+    hyper = TrainHyper(warmup=max(steps // 20, 5), total_steps=steps,
+                       compression=CompressionConfig(scheme=compression))
+    state = init_train_state(cfg, hyper, jax.random.PRNGKey(seed))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if resume and mgr and mgr.latest_step() is not None:
+        state = mgr.restore(state)
+        start_step = int(state.step)
+        print(f"resumed from step {start_step}")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=batch,
+                    seed=seed,
+                    frames=(seq_len // cfg.enc_seq_divisor
+                            if cfg.family == "audio" else 0),
+                    frame_dim=cfg.d_model if cfg.family == "audio" else 0,
+                    vision_tokens=cfg.vision_tokens,
+                    vit_dim=cfg.vit_dim)
+    it = make_batch_iterator(dc, start_step=start_step)
+    step_fn = jax.jit(make_train_step(cfg, hyper), donate_argnums=0)
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        state, metrics = step_fn(state, next(it))
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0) / max(i - start_step + 1, 1):.2f}"
+                  f" s/step)")
+        if mgr and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, state)
+    if mgr:
+        mgr.save(steps, state, blocking=True)
+    first = float(np.mean(losses[:10])) if len(losses) >= 10 else losses[0]
+    last = float(np.mean(losses[-10:]))
+    return {"first_loss": first, "last_loss": last, "steps": len(losses)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--preset", choices=("smoke", "full"), default="smoke")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compression", choices=("none", "topk", "int8"),
+                    default="none")
+    args = ap.parse_args()
+    out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
+                batch=args.batch, ckpt_dir=args.ckpt_dir,
+                resume=args.resume, preset=args.preset,
+                compression=args.compression)
+    print(f"loss {out['first_loss']:.3f} -> {out['last_loss']:.3f} "
+          f"over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

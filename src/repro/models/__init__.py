@@ -1,0 +1,27 @@
+"""models — the 10 assigned architectures as composable pure-JAX modules.
+
+A single config-driven stack (`transformer.py`) covers the dense / MoE /
+hybrid-recurrent / xLSTM decoder families via a repeating ``block_pattern``;
+`encdec.py` wraps it for encoder-decoder (seamless-m4t); modality frontends
+(audio frames, ViT patches) are stubs per the brief — `input_specs()` feeds
+precomputed embeddings.
+
+All parameters are plain pytrees (nested dicts); `init_params` is pure (and
+therefore usable under `jax.eval_shape` for the dry-run without allocating
+the 400B-parameter configs).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.transformer import (
+    init_params,
+    forward,
+    init_cache,
+    decode_step,
+    param_count,
+    active_param_count,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "init_params", "forward", "init_cache",
+    "decode_step", "param_count", "active_param_count",
+]

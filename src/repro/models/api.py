@@ -1,0 +1,67 @@
+"""Unified model API over the decoder-only and encoder-decoder stacks.
+
+A batch is a dict:
+  tokens   [B, T] int32            (always)
+  frames   [B, T_enc, d] float     (audio family: stub frontend embeddings)
+  patches  [B, n_vision, vit_dim]  (vlm family: stub patch embeddings)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.enc_layers > 0
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    if is_encdec(cfg):
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def forward(cfg: ModelConfig, params, batch: dict, use_kernel: bool = False,
+            remat: bool = True, unroll: bool = False) -> tuple[Array, Array]:
+    if is_encdec(cfg):
+        return encdec.forward(cfg, params, batch["tokens"], batch["frames"],
+                              use_kernel=use_kernel, unroll=unroll)
+    return transformer.forward(cfg, params, batch["tokens"],
+                               extra_embeds=batch.get("patches"),
+                               use_kernel=use_kernel, remat=remat,
+                               unroll=unroll)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, enc_len: int = 0) -> dict:
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, max_len,
+                                 enc_len or max(max_len // cfg.enc_seq_divisor, 8),
+                                 dtype)
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, token: Array,
+                index, unroll: bool = False) -> tuple[Array, dict]:
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, params, cache, token, index,
+                                  unroll=unroll)
+    return transformer.decode_step(cfg, params, cache, token, index,
+                                   unroll=unroll)
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, max_len: int,
+            use_kernel: bool = False, unroll: bool = False
+            ) -> tuple[Array, dict]:
+    if is_encdec(cfg):
+        return encdec.prefill(cfg, params, batch["tokens"], batch["frames"],
+                              max_len, use_kernel=use_kernel, unroll=unroll)
+    return transformer.prefill(cfg, params, batch["tokens"], max_len,
+                               extra_embeds=batch.get("patches"),
+                               use_kernel=use_kernel, unroll=unroll)

@@ -1,0 +1,287 @@
+"""GQA attention covering the assigned archs' feature matrix.
+
+Features (config-driven): grouped KV heads, RoPE, qk-norm (Qwen3), QKV bias
+(Qwen1.5), attention-logit softcap (Gemma-2), local sliding window
+(Gemma-2 / RecurrentGemma / Llama-4 chunked-local), KV cache decode, and an
+optional cross-attention mode (seamless-m4t decoder).
+
+The full-sequence path can route through the Pallas flash-attention kernel
+(`repro.kernels.ops.flash_attention`); the jnp path here doubles as its
+oracle and as the backward recompute rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import dense_init, rope, softcap
+
+Array = jnp.ndarray
+
+
+def init_attn(key, cfg, cross: bool = False) -> dict:
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), in_axis=0),
+        "wk": dense_init(ks[1], (d, k, dh), in_axis=0),
+        "wv": dense_init(ks[2], (d, k, dh), in_axis=0),
+        "wo": dense_init(ks[3], (h, dh, d), in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), jnp.float32)
+        p["bk"] = jnp.zeros((k, dh), jnp.float32)
+        p["bv"] = jnp.zeros((k, dh), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, cfg, x: Array, kv_x: Array):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# --- hillclimb knobs (set by the perf harness; see EXPERIMENTS.md §Perf) ---
+# Shard the query/scores sequence axis over this mesh axis in full-sequence
+# attention (context parallelism): cuts the [T, S] probs bytes by the axis
+# size when heads cannot shard (e.g. qwen1.5's 20 heads on a 16-way axis).
+SEQ_SHARD_AXIS: str | None = None
+# Decode GQA via grouped einsum instead of materializing repeated KV heads
+# (avoids the partitioner all-gathering the whole KV cache per step).
+DECODE_GROUPED_GQA: bool = True
+
+
+def _seq_shard(x: Array, axis: int = 1) -> Array:
+    if SEQ_SHARD_AXIS is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[axis] = SEQ_SHARD_AXIS
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """Repeat KV heads to match query heads. A plain repeat (not a 5-D
+    grouped reshape) keeps GSPMD head-sharding propagation clean — the
+    grouped-einsum formulation triggers involuntary full rematerialization
+    in the partitioner (observed on the 16x16 dry-run)."""
+    g = n_heads // k.shape[2]
+    return k if g == 1 else jnp.repeat(k, g, axis=2)
+
+
+def _grouped_decode_attend(cfg, q, ck, cv, valid) -> Array:
+    """Decode attention without expanding KV: q [B,1,H,D] reshaped to
+    [B,1,K,g,D] against the cache [B,S,K,D] directly."""
+    b, t, h, dh = q.shape
+    kh = ck.shape[2]
+    g = h // kh
+    qg = q.reshape(b, t, kh, g, dh)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg, ck) \
+        / jnp.sqrt(dh).astype(q.dtype)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("btkgs,bskd->btkgd", probs, cv)
+    return out.reshape(b, t, h, dh)
+
+
+# materialized [T, S] probs above this threshold would blow VMEM/HBM; chunk
+# queries instead (flash-style memory behavior in plain jnp)
+_CHUNK_THRESHOLD = 2 ** 24
+_Q_CHUNK = 1024
+
+
+def _attend_dense(cfg, q, k, v, *, causal, window, q_offset):
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    q = _seq_shard(q)
+    scores = jnp.einsum("bthd,bshd->bths", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = softcap(scores, cfg.attn_softcap)
+    qpos = q_offset + jnp.arange(t)
+    kpos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bths,bshd->bthd", probs, v)
+
+
+def attend(cfg, q: Array, k: Array, v: Array, *, causal: bool,
+           window: int = 0, q_offset: Array | int = 0) -> Array:
+    """Reference scaled-dot-product GQA attention.
+
+    q: [B, T, H, D];  k/v: [B, S, K, D];  H = K * group.
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+
+    For large T*S the [T, S] probability matrix is never materialized:
+    queries are processed in _Q_CHUNK slices via lax.map (keeps HLO small and
+    peak memory O(chunk * S) — the jnp analogue of the flash kernel, and the
+    oracle it is tested against).
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    if t * s <= _CHUNK_THRESHOLD or t % _Q_CHUNK != 0:
+        return _attend_dense(cfg, q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+    n_chunks = t // _Q_CHUNK
+    qc = q.reshape(b, n_chunks, _Q_CHUNK, h, dh)
+
+    def one_chunk(args):
+        qi, off = args                        # qi: [b, chunk, h, dh]
+        return _attend_dense(cfg, qi, k, v, causal=causal,
+                             window=window, q_offset=q_offset + off)
+
+    offs = jnp.arange(n_chunks) * _Q_CHUNK
+    out = jax.lax.map(one_chunk, (jnp.moveaxis(qc, 1, 0), offs))
+    return jnp.moveaxis(out, 0, 1).reshape(b, t, h, dh)
+
+
+def attn_forward(params, cfg, x: Array, *, positions: Array,
+                 kv_x: Array | None = None, causal: bool = True,
+                 window: int = 0, use_kernel: bool = False,
+                 return_kv: bool = False):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    cross = kv_x is not None
+    q, k, v = _project_qkv(params, cfg, x, x if kv_x is None else kv_x)
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if use_kernel and not cross:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_softcap)
+    else:
+        out = attend(cfg, q, k, v, causal=causal and not cross, window=window)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, k, dh), dtype),
+        "v": jnp.zeros((batch, max_len, k, dh), dtype),
+    }
+
+
+def init_ring_cache(cfg, batch: int, window: int, dtype=jnp.float32) -> dict:
+    """Fixed-size rotating KV cache for sliding-window layers: O(window)
+    memory regardless of sequence length (essential for long_500k)."""
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, window, k, dh), dtype),
+        "v": jnp.zeros((batch, window, k, dh), dtype),
+        "pos": jnp.full((window,), -1, jnp.int32),
+    }
+
+
+def attn_decode_ring(params, cfg, x: Array, cache: dict, index: Array, *,
+                     window: int) -> tuple[Array, dict]:
+    """One-token decode against a ring KV cache. x: [B, 1, D]."""
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k_new = rope(k_new, positions, cfg.rope_theta)  # rotate at write time
+
+    w = cache["k"].shape[1]
+    slot = jnp.mod(index, w)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), index, jnp.int32), slot, axis=0)
+
+    b, t, h, dh = q.shape
+    valid = (pos >= 0) & (pos <= index) & (pos > index - window)
+    if DECODE_GROUPED_GQA:
+        out = _grouped_decode_attend(cfg, q, ck, cv, valid)
+    else:
+        ke = _expand_kv(ck, h)
+        ve = _expand_kv(cv, h)
+        scores = jnp.einsum("bthd,bshd->bths", q, ke) \
+            / jnp.sqrt(dh).astype(q.dtype)
+        scores = softcap(scores, cfg.attn_softcap)
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(q.dtype)
+        out = jnp.einsum("bths,bshd->bthd", probs, ve)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"k": ck, "v": cv, "pos": pos}
+
+
+def fill_kv_cache(cache: dict, k: Array, v: Array) -> dict:
+    """Write prefill K/V [B, T, K, D] into a zero-init full cache at [0:T]."""
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+    return {"k": ck, "v": cv}
+
+
+def fill_ring_cache(cache: dict, k: Array, v: Array, t: int) -> dict:
+    """Write the last `window` prefill K/V into a ring cache, slot = pos % W."""
+    w = cache["k"].shape[1]
+    take = min(w, t)
+    # positions of the kept tail, placed at their ring slots
+    tail_pos = jnp.arange(t - take, t)
+    slots = jnp.mod(tail_pos, w)
+    ck = cache["k"].at[:, slots].set(k[:, t - take: t])
+    cv = cache["v"].at[:, slots].set(v[:, t - take: t])
+    pos = cache["pos"].at[slots].set(tail_pos.astype(jnp.int32))
+    return {"k": ck, "v": cv, "pos": pos}
+
+
+def attn_decode(params, cfg, x: Array, cache: dict, index: Array, *,
+                window: int = 0) -> tuple[Array, dict]:
+    """One-token decode step. x: [B, 1, D]; cache k/v: [B, S, K, D]."""
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k_new = rope(k_new, positions, cfg.rope_theta)
+
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, index, axis=1)
+
+    b, t, h, dh = q.shape
+    s = ck.shape[1]
+    kpos = jnp.arange(s)
+    valid = kpos <= index
+    if window and window > 0:
+        valid &= kpos > (index - window)
+    if DECODE_GROUPED_GQA:
+        out = _grouped_decode_attend(cfg, q, ck, cv, valid)
+    else:
+        ke = _expand_kv(ck, h)
+        ve = _expand_kv(cv, h)
+        scores = jnp.einsum("bthd,bshd->bths", q, ke) \
+            / jnp.sqrt(dh).astype(q.dtype)
+        scores = softcap(scores, cfg.attn_softcap)
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(q.dtype)
+        out = jnp.einsum("bths,bshd->bthd", probs, ve)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"k": ck, "v": cv}

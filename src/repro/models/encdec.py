@@ -1,0 +1,217 @@
+"""Encoder-decoder wrapper (seamless-m4t family).
+
+Encoder: bidirectional attention stack over precomputed modality frame
+embeddings (the speech frontend is a stub per the brief — `input_specs`
+supplies [B, T_enc, d] frames).  Decoder: causal self-attention +
+cross-attention + FFN blocks over target tokens.  Both stacks scan their
+layers like `transformer.py`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, embed_init, norm, norm_param
+
+Array = jnp.ndarray
+Params = Any
+
+
+def _init_enc_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": norm_param(cfg, cfg.d_model),
+        "attn": attention.init_attn(k1, cfg),
+        "norm2": norm_param(cfg, cfg.d_model),
+        "ffn": layers.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": norm_param(cfg, cfg.d_model),
+        "self_attn": attention.init_attn(k1, cfg),
+        "norm_x": norm_param(cfg, cfg.d_model),
+        "cross_attn": attention.init_attn(k2, cfg),
+        "norm2": norm_param(cfg, cfg.d_model),
+        "ffn": layers.init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ModelConfig, key: Array) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    enc = [_init_enc_block(k, cfg) for k in enc_keys]
+    dec = [_init_dec_block(k, cfg) for k in dec_keys]
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_padded, cfg.d_model)),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": norm_param(cfg, cfg.d_model),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": norm_param(cfg, cfg.d_model),
+        "head": dense_init(ks[3], (cfg.d_model, cfg.vocab_padded)),
+    }
+
+
+def _maybe_unrolled_scan(fn, carry, xs, unroll):
+    if not unroll:
+        return jax.lax.scan(fn, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = fn(carry, jax.tree.map(lambda x: x[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+
+def encode(cfg: ModelConfig, params: Params, frames: Array,
+           use_kernel: bool = False, unroll: bool = False) -> Array:
+    """frames: [B, T_enc, d] precomputed frontend embeddings."""
+    frames = frames.astype(params["embed"].dtype)   # match compute dtype
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+
+    def block(h, p):
+        x = norm(cfg, h, p["norm1"])
+        h = h + attention.attn_forward(p["attn"], cfg, x, positions=positions,
+                                       causal=False, use_kernel=use_kernel)
+        x = norm(cfg, h, p["norm2"])
+        return h + layers.mlp(p["ffn"], x), None
+
+    h, _ = _maybe_unrolled_scan(jax.checkpoint(block), frames,
+                                params["enc"], unroll)
+    return norm(cfg, h, params["enc_norm"])
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: Array,
+            enc_frames: Array, use_kernel: bool = False,
+            unroll: bool = False) -> tuple[Array, Array]:
+    """Teacher-forced training forward. Returns (logits, aux=0)."""
+    memory = encode(cfg, params, enc_frames, use_kernel, unroll)
+    h = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+
+    def block(h, p):
+        x = norm(cfg, h, p["norm1"])
+        h = h + attention.attn_forward(p["self_attn"], cfg, x,
+                                       positions=positions,
+                                       use_kernel=use_kernel)
+        x = norm(cfg, h, p["norm_x"])
+        h = h + attention.attn_forward(p["cross_attn"], cfg, x,
+                                       positions=positions, kv_x=memory)
+        x = norm(cfg, h, p["norm2"])
+        return h + layers.mlp(p["ffn"], x), None
+
+    h, _ = _maybe_unrolled_scan(jax.checkpoint(block), h, params["dec"],
+                                unroll)
+    h = norm(cfg, h, params["final_norm"])
+    return h @ params["head"], jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.float32) -> dict:
+    kh, dh = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch, max_len, kh, dh), dtype),
+            "v": jnp.zeros((L, batch, max_len, kh, dh), dtype),
+        },
+        # cross K/V are precomputed from the encoder memory at prefill
+        "cross": {
+            "k": jnp.zeros((L, batch, enc_len, kh, dh), dtype),
+            "v": jnp.zeros((L, batch, enc_len, kh, dh), dtype),
+        },
+    }
+
+
+def prefill_cross(cfg: ModelConfig, params: Params, memory: Array,
+                  cache: dict) -> dict:
+    def per_layer(p):
+        k = jnp.einsum("bsd,dhk->bshk", memory, p["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, p["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k, v = k + p["cross_attn"]["bk"], v + p["cross_attn"]["bv"]
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec"])
+    return {**cache, "cross": {"k": ks, "v": vs}}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: Array, frames: Array,
+            max_len: int, use_kernel: bool = False,
+            unroll: bool = False) -> tuple[Array, dict]:
+    """Encode the source, teacher-force the target prefix, emit caches."""
+    memory = encode(cfg, params, frames, use_kernel, unroll)
+    h = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    batch = h.shape[0]
+
+    def block(h, p):
+        x = norm(cfg, h, p["norm1"])
+        y, (k, v) = attention.attn_forward(p["self_attn"], cfg, x,
+                                           positions=positions,
+                                           use_kernel=use_kernel,
+                                           return_kv=True)
+        h = h + y
+        kv = attention.fill_kv_cache(
+            attention.init_kv_cache(cfg, batch, max_len, h.dtype), k, v)
+        x = norm(cfg, h, p["norm_x"])
+        h = h + attention.attn_forward(p["cross_attn"], cfg, x,
+                                       positions=positions, kv_x=memory)
+        x = norm(cfg, h, p["norm2"])
+        return h + layers.mlp(p["ffn"], x), (kv["k"], kv["v"])
+
+    h, (sk, sv) = _maybe_unrolled_scan(block, h, params["dec"], unroll)
+    h = norm(cfg, h, params["final_norm"])
+    logits = h[:, -1] @ params["head"]
+    cache = {"self": {"k": sk, "v": sv}}
+    cache = prefill_cross(cfg, params, memory,
+                          {**cache, "cross": {"k": None, "v": None}})
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, token: Array,
+                index: Array, unroll: bool = False) -> tuple[Array, dict]:
+    h = params["embed"][token][:, None, :]
+
+    def block(carry, xs):
+        h = carry
+        p, sk, sv, ck, cv = xs
+        x = norm(cfg, h, p["norm1"])
+        y, new_self = attention.attn_decode(p["self_attn"], cfg, x,
+                                            {"k": sk, "v": sv}, index)
+        h = h + y
+        # cross attention against the precomputed memory K/V (no mask)
+        x = norm(cfg, h, p["norm_x"])
+        q = jnp.einsum("btd,dhk->bthk", x, p["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + p["cross_attn"]["bq"]
+        dh = q.shape[-1]
+        ke = attention._expand_kv(ck, q.shape[2])
+        ve = attention._expand_kv(cv, q.shape[2])
+        sc = jnp.einsum("bthd,bshd->bths", q, ke) / jnp.sqrt(dh)
+        pr = jax.nn.softmax(sc.astype(jnp.float32), -1).astype(q.dtype)
+        o = jnp.einsum("bths,bshd->bthd", pr, ve)
+        h = h + jnp.einsum("bthk,hkd->btd", o, p["cross_attn"]["wo"])
+        x = norm(cfg, h, p["norm2"])
+        h = h + layers.mlp(p["ffn"], x)
+        return h, (new_self["k"], new_self["v"])
+
+    xs = (params["dec"], cache["self"]["k"], cache["self"]["v"],
+          cache["cross"]["k"], cache["cross"]["v"])
+    h, (nk, nv) = _maybe_unrolled_scan(block, h, xs, unroll)
+    h = norm(cfg, h, params["final_norm"])
+    logits = h[:, 0] @ params["head"]
+    return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}

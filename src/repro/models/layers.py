@@ -1,0 +1,80 @@
+"""Shared primitive layers: norms, rotary embeddings, MLPs, inits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32) -> Array:
+    """LeCun-normal init (fan-in) — standard for transformer stacks."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, dtype) / jnp.sqrt(jnp.maximum(fan_in, 1))
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def rms_norm(x: Array, scale: Array | None, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale)
+    return y.astype(x.dtype)
+
+
+def nonparam_layer_norm(x: Array, eps: float = 1e-5) -> Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(cfg, x: Array, scale: Array | None) -> Array:
+    if cfg.nonparam_norm:
+        return nonparam_layer_norm(x, cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+def norm_param(cfg, d: int):
+    """None for non-parametric norms, zeros(d) otherwise (RMS 1+scale)."""
+    return None if cfg.nonparam_norm else jnp.zeros((d,), jnp.float32)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,T,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d, d_ff), dtype=dtype),
+        "up": dense_init(k2, (d, d_ff), dtype=dtype),
+        "down": dense_init(k3, (d_ff, d), dtype=dtype),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    return swiglu(x, params["gate"], params["up"], params["down"])

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE / Llama-4 Maverick families).
+
+Shared experts (always-on, DeepSeekMoE) + routed experts with softmax top-k
+gating.  Dispatch uses the capacity-based scatter/gather formulation
+(GShard-style): tokens are scattered into per-expert buffers [E, C, d] via
+cumsum positions (O(N*k*d) data movement, no N*E*C einsum), the expert
+matmuls run as one batched [E, C, d] x [E, d, f] contraction (FLOPs =
+top_k * N * d * f * capacity_factor — i.e. the *active* compute only), and
+outputs gather back with routing weights.  With the expert axis sharded over
+the "model" mesh axis this is expert parallelism; XLA SPMD inserts the
+dispatch all-to-all.  Tokens overflowing an expert's capacity are dropped
+(standard GShard semantics); an auxiliary Switch-style load-balancing loss
+discourages that in training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jnp.ndarray
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d, de = cfg.d_model, (m.d_expert or cfg.d_ff)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), in_axis=0),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, de), in_axis=1),
+        "w_up": dense_init(ks[2], (m.n_experts, d, de), in_axis=1),
+        "w_down": dense_init(ks[3], (m.n_experts, de, d), in_axis=1),
+    }
+    if m.n_shared:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": dense_init(sk[0], (d, de * m.n_shared)),
+            "up": dense_init(sk[1], (d, de * m.n_shared)),
+            "down": dense_init(sk[2], (de * m.n_shared, d)),
+        }
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    cap = int(n_tokens * m.top_k * cfg.capacity_factor / m.n_experts) + 1
+    return max(cap, 4)
+
+
+DISPATCH_MODE = "sort"   # "sort" (default) | "cumsum" (original baseline)
+
+# Expert-parallel sharding constraint: mesh axis to pin the expert buffers
+# to. Without it GSPMD replicates the [E, C, d] buffer and all-reduces it —
+# catastrophic at 1M tokens (hillclimb D2/D3: 4.4x on the collective term,
+# 3.4x on memory). Default "model"; harmless outside a mesh (guarded), and
+# no-op when E doesn't divide the axis.
+EP_CONSTRAINT_AXIS: str | None = "model"
+
+
+def _ep_constrain(x: Array, spec_axes) -> Array:
+    if EP_CONSTRAINT_AXIS is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [EP_CONSTRAINT_AXIS if a == "E" else None for a in spec_axes]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _positions_cumsum(flat_e: Array, n_experts: int) -> Array:
+    """Per-(token,slot) rank within its expert via a one-hot cumsum.
+
+    Simple but O(N*E) work on an [N*k, E] intermediate — at 1M-token train
+    batches this dominated the compute/memory roofline terms (hillclimb
+    Cell D, EXPERIMENTS.md §Perf). Kept as the measured baseline."""
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+
+
+def _positions_sort(flat_e: Array, n_experts: int) -> Array:
+    """Per-(token,slot) rank within its expert via a stable argsort
+    (MegaBlocks-style): O(N log N), no [N, E] intermediate. Stability keeps
+    the same earlier-token-wins capacity semantics as the cumsum path."""
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(nk, dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros((nk,), jnp.int32).at[order].set(rank_sorted)
+
+
+def moe_forward(params, cfg, x: Array) -> tuple[Array, Array]:
+    """x: [B, T, D] -> (y, aux_loss)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    cap = expert_capacity(n, cfg)
+
+    logits = xf @ params["router"]                        # [N, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)          # [N, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    top_w = top_w.astype(xf.dtype)
+
+    flat_e = top_i.reshape(-1)                            # [N*k]
+    if DISPATCH_MODE == "sort":
+        pos = _positions_sort(flat_e, m.n_experts)
+    else:
+        pos = _positions_cumsum(flat_e, m.n_experts)
+    keep = pos < cap
+    # dropped entries alias slot 0 but contribute zeros (masked add), so the
+    # buffer stays exactly [E*C, d] — shardable on the expert axis.
+    slot = jnp.where(keep, flat_e * cap + jnp.minimum(pos, cap - 1), 0)
+
+    # scatter tokens into expert buffers [E*C, d]
+    buf = jnp.zeros((m.n_experts * cap, d), xf.dtype)
+    tok_rep = jnp.repeat(jnp.arange(n), m.top_k)
+    buf = buf.at[slot].add(xf[tok_rep] * keep[:, None].astype(xf.dtype))
+    eb = buf.reshape(m.n_experts, cap, d)
+    eb = _ep_constrain(eb, ("E", None, None))
+
+    # --- expert compute (batched over experts) ---
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", eb, params["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out = _ep_constrain(out, ("E", None, None))
+
+    # --- combine: gather back, weight, and sum over the k slots ---
+    out_flat = out.reshape(m.n_experts * cap, d)
+    gathered = out_flat[slot] * (top_w.reshape(-1)[:, None]
+                                 * keep[:, None].astype(out.dtype))
+    y = jnp.sum(gathered.reshape(n, m.top_k, d), axis=1)
+
+    if m.n_shared:
+        s = params["shared"]
+        y = y + (jax.nn.silu(xf @ s["gate"]) * (xf @ s["up"])) @ s["down"]
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                # mean router prob
+    counts = jnp.zeros((m.n_experts,), jnp.float32).at[flat_e].add(1.0)
+    frac = counts / n                                      # assignment frac
+    aux = jnp.sum(me * frac) * m.n_experts
+
+    return y.reshape(b, t, d), aux.astype(jnp.float32)

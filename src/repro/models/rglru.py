@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (diagonal, gated):
+    r_t = sigmoid(W_a x_t)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t)                    (input gate)
+    a_t = exp(-c * softplus(L) * r_t)         (c = 8, L learned)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block: two branches from the residual stream — a gelu-gated linear branch
+and (temporal conv(width 4) -> RG-LRU) — multiplied and projected out.
+
+Training path: `scan_rg_lru` — an associative scan (the `ref.py` oracle for
+the Pallas `rg_lru` kernel, which tiles (batch, channel) blocks in VMEM and
+walks time sequentially).  Decode path: single fused step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jnp.ndarray
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg) -> dict:
+    d = cfg.d_model
+    dr = d  # lru width = d_model in RecurrentGemma
+    ks = jax.random.split(key, 7)
+    return {
+        "w_lin": dense_init(ks[0], (d, dr)),        # gelu branch
+        "w_x": dense_init(ks[1], (d, dr)),          # recurrent branch in
+        "w_out": dense_init(ks[2], (dr, d)),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, dr), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": dense_init(ks[4], (dr, dr)),
+        "w_i": dense_init(ks[5], (dr, dr)),
+        # softplus(L) in (0.999, 0.001)-ish decay band at init
+        "lam": jax.random.uniform(ks[6], (dr,), jnp.float32, 0.2, 0.8),
+    }
+
+
+def _gates(params, u: Array):
+    r = jax.nn.sigmoid(u @ params["w_a"])
+    i = jax.nn.sigmoid(u @ params["w_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    return a, gated
+
+
+def scan_rg_lru(a: Array, b: Array, h0: Array | None = None) -> Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a/b: [B, T, D]."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def conv1d_causal(params, x: Array, state: Array | None = None):
+    """Depthwise causal temporal conv. x: [B, T, D]; state: [B, W-1, D]."""
+    w = params["conv_w"]                      # [W, D]
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return out + params["conv_b"], new_state
+
+
+def rglru_forward(params, cfg, x: Array, use_kernel: bool = False,
+                  return_state: bool = False):
+    """Full-sequence recurrent block. x: [B, T, D]."""
+    lin = jax.nn.gelu(x @ params["w_lin"])
+    u_raw = x @ params["w_x"]
+    u, conv_state = conv1d_causal(params, u_raw)
+    a, b = _gates(params, u)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        h = kernel_ops.rg_lru(a, b)
+    else:
+        h = scan_rg_lru(a, b)
+    y = (h * lin) @ params["w_out"]
+    if return_state:
+        return y, {"h": h[:, -1], "conv": conv_state}
+    return y
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+    }
+
+
+def rglru_decode(params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    """Single-token step. x: [B, 1, D]."""
+    lin = jax.nn.gelu(x @ params["w_lin"])
+    u = x @ params["w_x"]
+    u, conv_state = conv1d_causal(params, u, cache["conv"])
+    a, b = _gates(params, u)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h[:, None] * lin) @ params["w_out"]
+    return y, {"h": h, "conv": conv_state}

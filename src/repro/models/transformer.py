@@ -1,0 +1,451 @@
+"""The unified decoder stack driving all 10 assigned architectures.
+
+Layer loop structure (compile-friendly for the 512-device dry-run):
+
+    [lead blocks]  first_k_dense DeepSeekMoE-style dense layers, unscanned
+    [scan groups]  n_groups repetitions of cfg.block_pattern, parameters
+                   stacked on a leading axis and stepped with lax.scan
+                   (keeps HLO size O(group), lets remat wrap one group)
+    [tail blocks]  pattern remainder when n_layers % len(pattern) != 0
+
+Block kinds: "attn" (global), "attn_local" (sliding window), "rec" (RG-LRU),
+"mlstm", "slstm".  FFN kinds per position: "dense" | "moe" | "none".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe as moe_mod, rglru, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, embed_init, norm, norm_param
+
+Array = jnp.ndarray
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, ffn_kind: str,
+                d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    p: dict = {"norm1": norm_param(cfg, cfg.d_model)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = attention.init_attn(k1, cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.init_rglru_block(k1, cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm_block(k1, cfg)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm_block(k1, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.post_norm:
+        p["postnorm1"] = norm_param(cfg, cfg.d_model)
+    if ffn_kind == "dense":
+        p["norm2"] = norm_param(cfg, cfg.d_model)
+        p["ffn"] = layers.init_mlp(k2, cfg.d_model, d_ff)
+        if cfg.post_norm:
+            p["postnorm2"] = norm_param(cfg, cfg.d_model)
+    elif ffn_kind == "moe":
+        p["norm2"] = norm_param(cfg, cfg.d_model)
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+        if cfg.post_norm:
+            p["postnorm2"] = norm_param(cfg, cfg.d_model)
+    return p
+
+
+def _apply_block(cfg: ModelConfig, kind: str, ffn_kind: str, p: dict,
+                 h: Array, positions: Array, use_kernel: bool
+                 ) -> tuple[Array, Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = norm(cfg, h, p["norm1"])
+    if kind == "attn":
+        y = attention.attn_forward(p["attn"], cfg, x, positions=positions,
+                                   use_kernel=use_kernel)
+    elif kind == "attn_local":
+        y = attention.attn_forward(p["attn"], cfg, x, positions=positions,
+                                   window=cfg.window, use_kernel=use_kernel)
+    elif kind == "rec":
+        y = rglru.rglru_forward(p["rec"], cfg, x, use_kernel=use_kernel)
+    elif kind == "mlstm":
+        y = xlstm.mlstm_forward(p["mlstm"], cfg, x)
+    elif kind == "slstm":
+        y = xlstm.slstm_forward(p["slstm"], cfg, x)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        y = norm(cfg, y, p["postnorm1"])
+    h = h + y
+
+    if ffn_kind in ("dense", "moe"):
+        x = norm(cfg, h, p["norm2"])
+        if ffn_kind == "dense":
+            y = layers.mlp(p["ffn"], x)
+        else:
+            y, aux = moe_mod.moe_forward(p["moe"], cfg, x)
+        if cfg.post_norm:
+            y = norm(cfg, y, p["postnorm2"])
+        h = h + y
+    return h, aux
+
+
+def _decode_block(cfg: ModelConfig, kind: str, ffn_kind: str, p: dict,
+                  h: Array, cache: dict, index: Array) -> tuple[Array, dict]:
+    x = norm(cfg, h, p["norm1"])
+    if kind == "attn":
+        y, new_cache = attention.attn_decode(p["attn"], cfg, x, cache, index)
+    elif kind == "attn_local":
+        y, new_cache = attention.attn_decode_ring(p["attn"], cfg, x, cache,
+                                                  index, window=cfg.window)
+    elif kind == "rec":
+        y, new_cache = rglru.rglru_decode(p["rec"], cfg, x, cache)
+    elif kind == "mlstm":
+        y, new_cache = xlstm.mlstm_decode(p["mlstm"], cfg, x, cache)
+    elif kind == "slstm":
+        y, new_cache = xlstm.slstm_decode(p["slstm"], cfg, x, cache)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        y = norm(cfg, y, p["postnorm1"])
+    h = h + y
+    if ffn_kind in ("dense", "moe"):
+        x = norm(cfg, h, p["norm2"])
+        if ffn_kind == "dense":
+            y = layers.mlp(p["ffn"], x)
+        else:
+            y, _ = moe_mod.moe_forward(p["moe"], cfg, x)
+        if cfg.post_norm:
+            y = norm(cfg, y, p["postnorm2"])
+        h = h + y
+    return h, new_cache
+
+
+def _block_plan(cfg: ModelConfig):
+    """(lead, pattern, n_groups, tail) block/ffn kind lists."""
+    pattern = list(zip(cfg.block_pattern, cfg.ffn_kinds))
+    lead = [("attn", "dense")] * cfg.first_k_dense
+    n_rest = cfg.n_layers - len(lead)
+    n_groups = n_rest // len(pattern)
+    tail = pattern[: n_rest - n_groups * len(pattern)]
+    return lead, pattern, n_groups, tail
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: Array) -> Params:
+    lead, pattern, n_groups, tail = _block_plan(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {"embed": embed_init(keys[0], (cfg.vocab_padded, d))}
+    if cfg.vit_dim:
+        p["proj_vision"] = dense_init(keys[1], (cfg.vit_dim, d))
+    lead_ff = cfg.dense_d_ff or cfg.d_ff
+
+    def init_group(gkey):
+        ks = jax.random.split(gkey, len(pattern))
+        return {f"b{i}": _init_block(ks[i], cfg, kind, ffn, cfg.d_ff)
+                for i, (kind, ffn) in enumerate(pattern)}
+
+    if lead:
+        lks = jax.random.split(keys[2], len(lead))
+        p["lead"] = {str(i): _init_block(lks[i], cfg, k, f, lead_ff)
+                     for i, (k, f) in enumerate(lead)}
+    if n_groups:
+        gks = jax.random.split(keys[3], n_groups)
+        groups = [init_group(gks[g]) for g in range(n_groups)]
+        p["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if tail:
+        tks = jax.random.split(keys[4], len(tail))
+        p["tail"] = {str(i): _init_block(tks[i], cfg, k, f, cfg.d_ff)
+                     for i, (k, f) in enumerate(tail)}
+    p["final_norm"] = norm_param(cfg, d)
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(keys[5], (d, cfg.vocab_padded))
+    return p
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, tokens: Array,
+                 extra_embeds: Optional[Array] = None) -> Array:
+    h = params["embed"][tokens]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(cfg.d_model).astype(h.dtype)
+    if extra_embeds is not None:
+        if cfg.vit_dim:
+            extra_embeds = extra_embeds @ params["proj_vision"]
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: Array,
+            extra_embeds: Optional[Array] = None, use_kernel: bool = False,
+            remat: bool = True, unroll: bool = False) -> tuple[Array, Array]:
+    """Returns (logits [B, T, V], aux_loss scalar). ``unroll`` replaces the
+    layer-group scan with a python loop (roofline L1/L2 lowers need every op
+    instance visible because XLA's cost analysis counts a while body once)."""
+    lead, pattern, n_groups, tail = _block_plan(cfg)
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, (kind, ffn) in enumerate(lead):
+        h, a = _apply_block(cfg, kind, ffn, params["lead"][str(i)], h,
+                            positions, use_kernel)
+        aux = aux + a
+
+    if n_groups:
+        def group_fn(carry, gparams):
+            h, aux = carry
+            for i, (kind, ffn) in enumerate(pattern):
+                h, a = _apply_block(cfg, kind, ffn, gparams[f"b{i}"], h,
+                                    positions, use_kernel)
+                aux = aux + a
+            return (h, aux), None
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn)
+        if unroll:
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda x: x[g], params["groups"])
+                (h, aux), _ = group_fn((h, aux), gp)
+        else:
+            (h, aux), _ = jax.lax.scan(group_fn, (h, aux), params["groups"])
+
+    for i, (kind, ffn) in enumerate(tail):
+        h, a = _apply_block(cfg, kind, ffn, params["tail"][str(i)], h,
+                            positions, use_kernel)
+        aux = aux + a
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ head
+    logits = layers.softcap(logits, cfg.logit_softcap)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also emits decode caches
+# ---------------------------------------------------------------------------
+
+def _apply_block_prefill(cfg, kind: str, ffn_kind: str, p: dict, h: Array,
+                         positions: Array, use_kernel: bool, max_len: int
+                         ) -> tuple[Array, Array, dict]:
+    t = h.shape[1]
+    batch = h.shape[0]
+    aux = jnp.zeros((), jnp.float32)
+    x = norm(cfg, h, p["norm1"])
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        y, (k, v) = attention.attn_forward(
+            p["attn"], cfg, x, positions=positions, window=window,
+            use_kernel=use_kernel, return_kv=True)
+        if kind == "attn":
+            cache = attention.fill_kv_cache(
+                attention.init_kv_cache(cfg, batch, max_len, h.dtype), k, v)
+        else:
+            w = min(cfg.window or max_len, max_len)
+            cache = attention.fill_ring_cache(
+                attention.init_ring_cache(cfg, batch, w, h.dtype), k, v, t)
+    elif kind == "rec":
+        y, cache = rglru.rglru_forward(p["rec"], cfg, x,
+                                       use_kernel=use_kernel,
+                                       return_state=True)
+    elif kind == "mlstm":
+        y, cache = xlstm.mlstm_forward(p["mlstm"], cfg, x, return_state=True)
+    elif kind == "slstm":
+        y, cache = xlstm.slstm_forward(p["slstm"], cfg, x, return_state=True)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        y = norm(cfg, y, p["postnorm1"])
+    h = h + y
+    if ffn_kind in ("dense", "moe"):
+        x = norm(cfg, h, p["norm2"])
+        if ffn_kind == "dense":
+            y = layers.mlp(p["ffn"], x)
+        else:
+            y, aux = moe_mod.moe_forward(p["moe"], cfg, x)
+        if cfg.post_norm:
+            y = norm(cfg, y, p["postnorm2"])
+        h = h + y
+    return h, aux, cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: Array, max_len: int,
+            extra_embeds: Optional[Array] = None, use_kernel: bool = False,
+            unroll: bool = False) -> tuple[Array, dict]:
+    """Process a prompt, returning (last-position logits [B, V], cache)."""
+    lead, pattern, n_groups, tail = _block_plan(cfg)
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    cache: dict = {}
+
+    if lead:
+        cache["lead"] = {}
+        for i, (kind, ffn) in enumerate(lead):
+            h, _, cc = _apply_block_prefill(cfg, kind, ffn,
+                                            params["lead"][str(i)], h,
+                                            positions, use_kernel, max_len)
+            cache["lead"][str(i)] = cc
+
+    if n_groups:
+        def group_fn(h, gparams):
+            out_cache = {}
+            for i, (kind, ffn) in enumerate(pattern):
+                h, _, cc = _apply_block_prefill(cfg, kind, ffn,
+                                                gparams[f"b{i}"], h,
+                                                positions, use_kernel,
+                                                max_len)
+                out_cache[f"b{i}"] = cc
+            return h, out_cache
+
+        if unroll:
+            caches = []
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda x: x[g], params["groups"])
+                h, cc = group_fn(h, gp)
+                caches.append(cc)
+            cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        else:
+            h, cache["groups"] = jax.lax.scan(group_fn, h, params["groups"])
+
+    if tail:
+        cache["tail"] = {}
+        for i, (kind, ffn) in enumerate(tail):
+            h, _, cc = _apply_block_prefill(cfg, kind, ffn,
+                                            params["tail"][str(i)], h,
+                                            positions, use_kernel, max_len)
+            cache["tail"][str(i)] = cc
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = layers.softcap(h[:, -1] @ head, cfg.logit_softcap)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV/recurrent caches)
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        return attention.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "attn_local":
+        w = min(cfg.window or max_len, max_len)
+        return attention.init_ring_cache(cfg, batch, w, dtype)
+    if kind == "rec":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    lead, pattern, n_groups, tail = _block_plan(cfg)
+    c: dict = {}
+    if lead:
+        c["lead"] = {str(i): _init_block_cache(cfg, k, batch, max_len, dtype)
+                     for i, (k, _) in enumerate(lead)}
+    if n_groups:
+        one = {f"b{i}": _init_block_cache(cfg, k, batch, max_len, dtype)
+               for i, (k, _) in enumerate(pattern)}
+        c["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one)
+    if tail:
+        c["tail"] = {str(i): _init_block_cache(cfg, k, batch, max_len, dtype)
+                     for i, (k, _) in enumerate(tail)}
+    return c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, token: Array,
+                index: Array, unroll: bool = False) -> tuple[Array, dict]:
+    """token: [B] int32; index: scalar position. Returns (logits [B,V], cache)."""
+    lead, pattern, n_groups, tail = _block_plan(cfg)
+    h = params["embed"][token][:, None, :]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(cfg.d_model).astype(h.dtype)
+    new_cache: dict = {}
+
+    if lead:
+        new_cache["lead"] = {}
+        for i, (kind, ffn) in enumerate(lead):
+            h, cc = _decode_block(cfg, kind, ffn, params["lead"][str(i)], h,
+                                  cache["lead"][str(i)], index)
+            new_cache["lead"][str(i)] = cc
+
+    if n_groups:
+        def group_fn(h, xs):
+            gparams, gcache = xs
+            out_cache = {}
+            for i, (kind, ffn) in enumerate(pattern):
+                h, cc = _decode_block(cfg, kind, ffn, gparams[f"b{i}"], h,
+                                      gcache[f"b{i}"], index)
+                out_cache[f"b{i}"] = cc
+            return h, out_cache
+
+        if unroll:
+            caches = []
+            for g in range(n_groups):
+                sl = lambda x: x[g]
+                h, cc = group_fn(h, (jax.tree.map(sl, params["groups"]),
+                                     jax.tree.map(sl, cache["groups"])))
+                caches.append(cc)
+            new_cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                               *caches)
+        else:
+            h, new_cache["groups"] = jax.lax.scan(
+                group_fn, h, (params["groups"], cache["groups"]))
+
+    if tail:
+        new_cache["tail"] = {}
+        for i, (kind, ffn) in enumerate(tail):
+            h, cc = _decode_block(cfg, kind, ffn, params["tail"][str(i)], h,
+                                  cache["tail"][str(i)], index)
+            new_cache["tail"][str(i)] = cc
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = layers.softcap(h[:, 0] @ head, cfg.logit_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (for MODEL_FLOPS = 6*N*D)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    if cfg.enc_layers > 0:
+        from repro.models import encdec
+        shapes = jax.eval_shape(lambda k: encdec.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    else:
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: total minus the routed experts not selected
+    and minus the embedding lookup table (gather, not matmul)."""
+    total = param_count(cfg)
+    embed = cfg.vocab * cfg.d_model
+    if cfg.moe is None:
+        return total - (embed if not cfg.tie_embeddings else 0)
+    m = cfg.moe
+    de = m.d_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * de
+    _, pattern, n_groups, tail = _block_plan(cfg)
+    kinds = (list(pattern) * n_groups) + list(tail)
+    n_moe_layers = sum(1 for _, f in kinds if f == "moe")
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive - (embed if not cfg.tie_embeddings else 0)

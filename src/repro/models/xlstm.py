@@ -1,0 +1,240 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory with exponential gating).
+
+mLSTM training uses the stabilized parallel form (quadratic in T, like
+attention with cumulative log-gates); decode keeps the recurrent state
+(C: [B,H,D,D], n: [B,H,D], m: [B,H]) — constant memory in sequence length,
+which is what qualifies xlstm-125m for the long_500k shape.
+
+sLSTM has hidden-to-hidden recurrence (block-diagonal per head) and is
+inherently sequential: training scans time with `lax.scan`.
+
+Block structure follows the paper: mLSTM block = pre-LN -> up-projection x2
+-> (conv -> q,k,v -> mLSTM) * swish(gate branch) -> down-projection;
+sLSTM block = pre-LN -> conv -> 4-gate sLSTM -> group-norm -> gated FFN.
+d_ff = 0 in the assigned config: all width lives in these projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.models.rglru import conv1d_causal
+
+Array = jnp.ndarray
+
+PF_MLSTM = 2.0   # mLSTM up-projection factor
+PF_SLSTM = 4.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg) -> dict:
+    d = cfg.d_model
+    di = int(PF_MLSTM * d)
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, di)),
+        "w_gate": dense_init(ks[1], (d, di)),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, di), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[3], (di, h, dh), in_axis=0),
+        "wk": dense_init(ks[4], (di, h, dh), in_axis=0),
+        "wv": dense_init(ks[5], (di, h, dh), in_axis=0),
+        "w_if": dense_init(ks[6], (di, h, 2), in_axis=0),  # input/forget gates
+        "b_if": jnp.zeros((h, 2), jnp.float32),
+        "skip": jnp.ones((di,), jnp.float32),
+        "out_norm": jnp.zeros((di,), jnp.float32),
+        "w_down": dense_init(ks[7], (di, d)),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel mLSTM. q/k/v: [B,T,H,D]; gates: [B,T,H]."""
+    b, t, h, dh = q.shape
+    cum_f = jnp.cumsum(log_f, axis=1)                       # [B,T,H]
+    # D[t, s] = cum_f[t] - cum_f[s] + log_i[s]  for s <= t
+    dmat = cum_f[:, :, None, :] - cum_f[:, None, :, :] \
+        + log_i[:, None, :, :]                              # [B,T,S,H]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                # [B,T,1,H]
+    w = jnp.exp(dmat - m)                                   # stabilized
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) / jnp.sqrt(dh)
+    ws = w * scores
+    num = jnp.einsum("btsh,bshd->bthd", ws, v)
+    den = jnp.maximum(jnp.abs(jnp.sum(ws, axis=2)),
+                      jnp.exp(-m[:, :, 0, :]))              # [B,T,H]
+    return num / den[..., None]
+
+
+def mlstm_forward(params, cfg, x: Array, return_state: bool = False):
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    c, conv_state = conv1d_causal({"conv_w": params["conv_w"],
+                                   "conv_b": params["conv_b"]}, up)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("btd,dhk->bthk", c, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", c, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", up, params["wv"])
+    gif = jnp.einsum("btd,dhg->bthg", up, params["w_if"]) + params["b_if"]
+    log_i = gif[..., 0] - jax.nn.softplus(gif[..., 0])      # log sigmoid-ish
+    log_f = -jax.nn.softplus(-gif[..., 1])                  # log sigmoid
+    hten = _mlstm_parallel(q, k, v, log_i, log_f)
+    b, t, h, dh = hten.shape
+    hflat = rms_norm(hten.reshape(b, t, h * dh), params["out_norm"])
+    hflat = hflat + params["skip"] * c
+    y = (hflat * jax.nn.silu(gate)) @ params["w_down"]
+    if not return_state:
+        return y
+    # final recurrent state for decode continuation:
+    # m_T = max_s (cumf_T - cumf_s + logi_s); C/n accumulate exp(.-m_T) terms
+    cum_f = jnp.cumsum(log_f, axis=1)                        # [B,T,H]
+    w_log = cum_f[:, -1:, :] - cum_f + log_i                 # [B,T,H]
+    m_t = jnp.max(w_log, axis=1)                             # [B,H]
+    w = jnp.exp(w_log - m_t[:, None, :])                     # [B,T,H]
+    c_state = jnp.einsum("bth,bthv,bthk->bhvk", w, v, k) / jnp.sqrt(dh)
+    n_state = jnp.einsum("bth,bthk->bhk", w, k) / jnp.sqrt(dh)
+    state = {"C": c_state, "n": n_state, "m": m_t, "conv": conv_state}
+    return y, state
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    di = int(PF_MLSTM * cfg.d_model)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), dtype),
+        "n": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.full((batch, h), -1e30, dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_decode(params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    """x: [B, 1, D]."""
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    c, conv_state = conv1d_causal({"conv_w": params["conv_w"],
+                                   "conv_b": params["conv_b"]},
+                                  up, cache["conv"])
+    c = jax.nn.silu(c)
+    q = jnp.einsum("btd,dhk->bthk", c, params["wq"])[:, 0]
+    k = jnp.einsum("btd,dhk->bthk", c, params["wk"])[:, 0]
+    v = jnp.einsum("btd,dhk->bthk", up, params["wv"])[:, 0]
+    gif = jnp.einsum("btd,dhg->bthg", up, params["w_if"])[:, 0] + params["b_if"]
+    log_i = gif[..., 0] - jax.nn.softplus(gif[..., 0])
+    log_f = -jax.nn.softplus(-gif[..., 1])
+
+    m_new = jnp.maximum(cache["m"] + log_f, log_i)          # [B,H]
+    fs = jnp.exp(cache["m"] + log_f - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    dh = q.shape[-1]
+    c_new = fs[..., None, None] * cache["C"] \
+        + is_[..., None, None] * (v[..., :, None] * k[..., None, :] / jnp.sqrt(dh))
+    n_new = fs[..., None] * cache["n"] + is_[..., None] * k / jnp.sqrt(dh)
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    hten = num / den[..., None]                             # [B,H,dh]
+    b = x.shape[0]
+    hflat = rms_norm(hten.reshape(b, 1, -1), params["out_norm"])
+    hflat = hflat + params["skip"] * c
+    y = (hflat * jax.nn.silu(gate)) @ params["w_down"]
+    return y, {"C": c_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dff = int(PF_SLSTM * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "conv_w": dense_init(ks[0], (cfg.conv_width, d), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_gates": dense_init(ks[1], (d, h, 4, dh), in_axis=0),  # z i f o
+        "r_gates": dense_init(ks[2], (h, 4, dh, dh), in_axis=2) * 0.1,
+        "b_gates": jnp.zeros((h, 4, dh), jnp.float32),
+        "out_norm": jnp.zeros((d,), jnp.float32),
+        "ff_gate": dense_init(ks[3], (d, dff)),
+        "ff_up": dense_init(ks[4], (d, dff)),
+        "ff_down": dense_init(ks[5], (dff, d)),
+    }
+
+
+def _slstm_step(params, carry, xg):
+    """carry: (c, n, h, m) each [B, H, dh]; xg: [B, H, 4, dh]."""
+    c, n, hprev, m = carry
+    rec = jnp.einsum("bhd,hgde->bhge", hprev, params["r_gates"])
+    g = xg + rec + params["b_gates"]
+    z = jnp.tanh(g[:, :, 0])
+    i_ = g[:, :, 1]
+    f_ = g[:, :, 2]
+    o = jax.nn.sigmoid(g[:, :, 3])
+    log_f = -jax.nn.softplus(-f_)
+    m_new = jnp.maximum(log_f + m, i_)
+    i_s = jnp.exp(i_ - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(params, cfg, x: Array, return_state: bool = False):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, d // cfg.n_heads
+    u, conv_state = conv1d_causal({"conv_w": params["conv_w"],
+                                   "conv_b": params["conv_b"]}, x)
+    u = jax.nn.silu(u)
+    xg = jnp.einsum("btd,dhge->bthge", u, params["w_gates"])  # [B,T,H,4,dh]
+    carry = (jnp.zeros((b, h, dh), x.dtype), jnp.full((b, h, dh), 1e-6, x.dtype),
+             jnp.zeros((b, h, dh), x.dtype), jnp.full((b, h, dh), -1e30, x.dtype))
+    step = lambda c, xt: _slstm_step(params, c, xt)
+    carry, hs = jax.lax.scan(step, carry, jnp.swapaxes(xg, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1).reshape(b, t, d)
+    hs = rms_norm(hs, params["out_norm"], cfg.norm_eps)
+    y = (jax.nn.silu(hs @ params["ff_gate"]) * (hs @ params["ff_up"])) \
+        @ params["ff_down"]
+    if return_state:
+        cc, nn, hh, mm = carry
+        return y, {"c": cc, "n": nn, "h": hh, "m": mm, "conv": conv_state}
+    return y
+
+
+def init_slstm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        "c": jnp.zeros((batch, h, dh), dtype),
+        "n": jnp.full((batch, h, dh), 1e-6, dtype),
+        "h": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.full((batch, h, dh), -1e30, dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+    }
+
+
+def slstm_decode(params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    b, _, d = x.shape
+    u, conv_state = conv1d_causal({"conv_w": params["conv_w"],
+                                   "conv_b": params["conv_b"]},
+                                  x, cache["conv"])
+    u = jax.nn.silu(u)
+    xg = jnp.einsum("btd,dhge->bthge", u, params["w_gates"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), h_new = _slstm_step(params, carry, xg)
+    hs = h_new.reshape(b, 1, d)
+    hs = rms_norm(hs, params["out_norm"], cfg.norm_eps)
+    y = (jax.nn.silu(hs @ params["ff_gate"]) * (hs @ params["ff_up"])) \
+        @ params["ff_down"]
+    return y, {"c": c, "n": n, "h": hh, "m": m, "conv": conv_state}

@@ -1,0 +1,24 @@
+"""netsim — vectorized discrete-time fluid network simulator.
+
+The evaluation substrate replacing the paper's 12-server testbed: links with
+FIFO queues and RED/ECN, per-flow multi-hop routing, RTT-delayed feedback,
+and periodic DNN-job traffic — all stepped by a single `jax.lax.scan`.
+"""
+
+from repro.netsim.topology import Topology, dumbbell, triangle, two_tier
+from repro.netsim.engine import CassiniSchedule, JobSpec, SimConfig, simulate
+from repro.netsim.metrics import (
+    SimResult,
+    interleave_score,
+    iteration_times,
+    mean_pairwise_interleave,
+    postprocess,
+    speedup_stats,
+)
+
+__all__ = [
+    "Topology", "dumbbell", "triangle", "two_tier",
+    "CassiniSchedule", "SimConfig", "JobSpec", "simulate",
+    "SimResult", "interleave_score", "iteration_times",
+    "mean_pairwise_interleave", "postprocess", "speedup_stats",
+]

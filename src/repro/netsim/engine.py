@@ -1,0 +1,528 @@
+"""Fluid network simulation engine.
+
+One `jax.lax.scan` steps the whole fabric: job phase machines, flow injection,
+store-and-forward link queues with RED/ECN, RTT-delayed ack/loss/CNP feedback,
+and the MLTCP-augmented congestion-control update (`repro.core.cc_tick`).
+
+Model summary (hardware-adaptation notes in DESIGN.md §2):
+  * fluid flows: each tick a flow injects ``min(rate*dt, bytes_left)``;
+  * store-and-forward: bytes advance one link per tick; per-link service is
+    ``cap*dt`` split proportionally across queued flows (FIFO-fair fluid);
+  * RED at enqueue: mark/drop probability ramps linearly on queue length
+    between ``red_qmin`` and ``red_qmax``; drop mode feeds Reno/CUBIC loss
+    events (Bernoulli on expected dropped packets) and retransmits the bytes;
+    ECN mode feeds DCQCN CNPs;
+  * feedback (acks = delivered bytes, loss, CNP) returns after ``rtt`` via a
+    ring buffer — the ack clock MLTCP's Algorithm 1 listens to;
+  * jobs: a phase *program* (compute_s, comm_bytes) pairs per iteration —
+    on/off for data-parallel jobs, multi-peak for hybrid DP/PP/TP jobs —
+    with optional stragglers and Cassini-style start-time enforcement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mltcp as core
+from repro.netsim.topology import HashableConfig, Topology
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class JobSpec(HashableConfig):
+    """Per-job workload description (numpy, static).
+
+    compute[J, P] seconds and comm_bytes[J, P] bytes define each iteration's
+    sub-phase program (P >= 1; unused phases zero-padded with n_phases[J]).
+    """
+
+    compute: np.ndarray          # [J, P] seconds
+    comm_bytes: np.ndarray       # [J, P] bytes
+    n_phases: np.ndarray         # [J] int
+    start_offset: np.ndarray     # [J] seconds
+    straggle_prob: np.ndarray    # [J] probability per iteration
+    iso_iter_time: np.ndarray    # [J] isolation iteration time (s)
+
+    @staticmethod
+    def simple(compute_s, comm_bytes, start_offset=None, straggle_prob=None,
+               cap_bytes_per_s: float = 50e9 / 8) -> "JobSpec":
+        """On/off jobs: one compute phase + one comm phase per iteration."""
+        compute_s = np.asarray(compute_s, np.float64)
+        comm_bytes_a = np.asarray(comm_bytes, np.float64)
+        j = compute_s.shape[0]
+        iso = compute_s + comm_bytes_a / cap_bytes_per_s
+        return JobSpec(
+            compute=compute_s[:, None],
+            comm_bytes=comm_bytes_a[:, None],
+            n_phases=np.ones((j,), np.int32),
+            start_offset=(np.zeros((j,)) if start_offset is None
+                          else np.asarray(start_offset, np.float64)),
+            straggle_prob=(np.zeros((j,)) if straggle_prob is None
+                           else np.asarray(straggle_prob, np.float64)),
+            iso_iter_time=iso,
+        )
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.compute.shape[0])
+
+    @property
+    def total_bytes(self) -> np.ndarray:
+        """[J] bytes per iteration (Algorithm 1's total_bytes input)."""
+        return self.comm_bytes.sum(axis=1)
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CassiniSchedule(HashableConfig):
+    """Centralized time-shift baseline [66]: align each job's comm-phase start
+    to ``offset + k*period``; the end-host agent delays a job that deviates by
+    more than ``eps`` until the next slot (which is how stragglers hurt it)."""
+
+    offset: np.ndarray           # [J] seconds
+    period: np.ndarray           # [J] seconds
+    eps: float = 2e-3
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SimConfig(HashableConfig):
+    topo: Topology
+    jobs: JobSpec
+    protocol: core.MLTCPConfig
+    sim_time: float = 10.0
+    dt: float = 2e-5
+    # RED / buffer parameters (per link, bytes)
+    red_qmin: float = 150e3
+    red_qmax: float = 1.5e6
+    red_pmax: float = 0.12
+    buffer_bytes: float = 4e6         # taildrop ceiling
+    ecn_mode: Optional[bool] = None   # default: True iff DCQCN
+    # Static [67] baseline: per-JOB constant aggressiveness factors
+    static_job_factors: Optional[np.ndarray] = None
+    cassini: Optional[CassiniSchedule] = None
+    cubic_epoch_reset_on_comm_start: bool = True
+    max_iters_recorded: int = 4096
+    n_chunks: int = 400               # trace resolution
+    seed: int = 0
+    use_pallas_kernel: bool = False   # route CC tick through kernels/ops.py
+
+    @property
+    def n_ticks(self) -> int:
+        return int(round(self.sim_time / self.dt))
+
+    @property
+    def rtt_ticks(self) -> int:
+        return max(1, int(round(self.protocol.cc.rtt / self.dt)))
+
+    def is_ecn(self) -> bool:
+        if self.ecn_mode is not None:
+            return self.ecn_mode
+        return self.protocol.cc.algo == int(core.Algo.DCQCN)
+
+
+# ---------------------------------------------------------------------------
+# Engine state
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    proto: core.MLTCPState
+    backlog: Array        # [M+1, N] queued bytes (row M = trash)
+    transit: Array        # [M+1, N] bytes arriving next tick
+    ring_del: Array       # [D, N] delivered bytes (feedback delay line)
+    ring_loss: Array      # [D, N] bool
+    ring_cnp: Array       # [D, N] bool
+    ring_ptr: Array       # int32
+    to_send: Array        # [N] bytes not yet injected (this comm sub-phase)
+    to_deliver: Array     # [N] bytes not yet delivered
+    comm_start: Array     # [N] time current comm sub-phase started
+    phase_idx: Array      # [J]
+    in_comm: Array        # [J] bool
+    t_rem: Array          # [J] remaining compute seconds
+    iter_idx: Array       # [J]
+    iter_start: Array     # [J]
+    hold_until: Array     # [J]
+    iter_times: Array     # [J, MAX_ITERS]
+    straggle_extra: Array # [J] sampled straggle time for current iteration
+    key: Array
+    tick: Array           # int32
+    # accumulators for trace chunks
+    acc_util: Array       # [M]
+    acc_drops: Array      # scalar (packets)
+    acc_marks: Array      # scalar (packets)
+    acc_jobbytes: Array   # [J] delivered bytes per job
+
+
+class TickStatics(NamedTuple):
+    """Device-resident static arrays used by the tick function."""
+
+    cap: Array            # [M]
+    first_link: Array     # [N]
+    next_link: Array      # [M+1, N] (M = trash/delivered)
+    f2j: Array            # [N]
+    spj_inv: Array        # [N] 1/flows-in-job
+    compute: Array        # [J, P]
+    comm_bytes: Array     # [J, P]
+    n_phases: Array       # [J]
+    start_offset: Array   # [J]
+    straggle_prob: Array  # [J]
+    iso_iter: Array       # [J]
+    job_total_bytes: Array  # [J]
+    period: Array         # [J]
+    static_factors: Optional[Array]
+    cassini_offset: Optional[Array]
+    cassini_period: Optional[Array]
+
+
+def _build_statics(cfg: SimConfig) -> TickStatics:
+    topo, jobs = cfg.topo, cfg.jobs
+    M, N = topo.n_links, topo.n_flows
+    hops = topo.hops
+    first_link = hops[:, 0].astype(np.int32)
+    # next_link[l, n]: link after l on n's path; M (trash) means "delivered".
+    nxt = np.full((M + 1, N), M, np.int32)
+    for n in range(N):
+        path = [l for l in hops[n] if l >= 0]
+        for i, l in enumerate(path):
+            nxt[l, n] = path[i + 1] if i + 1 < len(path) else M
+    f2j = topo.flow_to_job.astype(np.int32)
+    spj = np.bincount(f2j, minlength=jobs.n_jobs).astype(np.float64)
+    period = jobs.compute.sum(1) + jobs.comm_bytes.sum(1) / topo.cap.min()
+    sf = None
+    if cfg.static_job_factors is not None:
+        sf = jnp.asarray(np.asarray(cfg.static_job_factors)[f2j], jnp.float32)
+    return TickStatics(
+        cap=jnp.asarray(topo.cap, jnp.float32),
+        first_link=jnp.asarray(first_link),
+        next_link=jnp.asarray(nxt),
+        f2j=jnp.asarray(f2j),
+        spj_inv=jnp.asarray(1.0 / spj[f2j], jnp.float32),
+        compute=jnp.asarray(jobs.compute, jnp.float32),
+        comm_bytes=jnp.asarray(jobs.comm_bytes, jnp.float32),
+        n_phases=jnp.asarray(jobs.n_phases, jnp.int32),
+        start_offset=jnp.asarray(jobs.start_offset, jnp.float32),
+        straggle_prob=jnp.asarray(jobs.straggle_prob, jnp.float32),
+        iso_iter=jnp.asarray(jobs.iso_iter_time, jnp.float32),
+        job_total_bytes=jnp.asarray(jobs.total_bytes, jnp.float32),
+        period=jnp.asarray(period, jnp.float32),
+        static_factors=sf,
+        cassini_offset=(jnp.asarray(cfg.cassini.offset, jnp.float32)
+                        if cfg.cassini is not None else None),
+        cassini_period=(jnp.asarray(cfg.cassini.period, jnp.float32)
+                        if cfg.cassini is not None else None),
+    )
+
+
+def _init_state(cfg: SimConfig, statics: TickStatics) -> EngineState:
+    topo, jobs = cfg.topo, cfg.jobs
+    M, N, J = topo.n_links, topo.n_flows, jobs.n_jobs
+    D = cfg.rtt_ticks
+    z = jnp.zeros
+    return EngineState(
+        proto=core.init_state(N, cfg.protocol),
+        backlog=z((M + 1, N), jnp.float32),
+        transit=z((M + 1, N), jnp.float32),
+        ring_del=z((D, N), jnp.float32),
+        ring_loss=z((D, N), bool),
+        ring_cnp=z((D, N), bool),
+        ring_ptr=jnp.asarray(0, jnp.int32),
+        to_send=z((N,), jnp.float32),
+        to_deliver=z((N,), jnp.float32),
+        comm_start=z((N,), jnp.float32),
+        phase_idx=z((J,), jnp.int32),
+        in_comm=z((J,), bool),
+        t_rem=statics.compute[:, 0],          # start in compute of phase 0
+        iter_idx=z((J,), jnp.int32),
+        iter_start=statics.start_offset,
+        hold_until=z((J,), jnp.float32),
+        iter_times=jnp.full((J, cfg.max_iters_recorded), jnp.nan, jnp.float32),
+        straggle_extra=z((J,), jnp.float32),
+        key=jax.random.PRNGKey(cfg.seed),
+        tick=jnp.asarray(0, jnp.int32),
+        acc_util=z((M,), jnp.float32),
+        acc_drops=jnp.asarray(0.0, jnp.float32),
+        acc_marks=jnp.asarray(0.0, jnp.float32),
+        acc_jobbytes=z((J,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One tick
+# ---------------------------------------------------------------------------
+
+def _red_prob(cfg: SimConfig, q: Array) -> Array:
+    """Gentle RED: 0 -> pmax on [qmin, qmax], pmax -> 1 on [qmax, 2*qmax]."""
+    ramp1 = jnp.clip((q - cfg.red_qmin) / (cfg.red_qmax - cfg.red_qmin),
+                     0.0, 1.0) * cfg.red_pmax
+    ramp2 = jnp.clip((q - cfg.red_qmax) / cfg.red_qmax, 0.0, 1.0) \
+        * (1.0 - cfg.red_pmax)
+    return ramp1 + ramp2
+
+
+def _tick(cfg: SimConfig, statics: TickStatics, st: EngineState,
+          _unused) -> tuple[EngineState, None]:
+    dt = jnp.float32(cfg.dt)
+    t = st.tick.astype(jnp.float32) * dt
+    M = cfg.topo.n_links
+    N = cfg.topo.n_flows
+    J = cfg.jobs.n_jobs
+    mss = cfg.protocol.cc.mss
+    arange_n = jnp.arange(N)
+
+    key, k_loss, k_cnp, k_strag, k_samt = jax.random.split(st.key, 5)
+
+    # ------------------------------------------------------------------
+    # 1. Job phase machine: compute countdown -> comm-phase entry
+    # ------------------------------------------------------------------
+    started = t >= statics.start_offset
+    t_rem = jnp.where(~st.in_comm & started, st.t_rem - dt, st.t_rem)
+    compute_done = ~st.in_comm & started & (t_rem <= 0.0)
+
+    if statics.cassini_offset is not None:
+        # Cassini agent: comm may only start on its slot grid (+/- eps).
+        per = jnp.maximum(statics.cassini_period, 1e-6)
+        k = jnp.ceil((t - statics.cassini_offset) / per)
+        next_slot = statics.cassini_offset + k * per
+        near = jnp.abs(jnp.round((t - statics.cassini_offset) / per) * per
+                       + statics.cassini_offset - t) <= cfg.cassini.eps
+        hold = jnp.where(compute_done & ~near & (st.hold_until <= t),
+                         next_slot, st.hold_until)
+        enter_comm = compute_done & (near | (t >= hold))
+        hold_until = hold
+    else:
+        enter_comm = compute_done
+        hold_until = st.hold_until
+
+    in_comm = st.in_comm | enter_comm
+
+    # flows of entering jobs pick up their sub-phase quota
+    phase_bytes_job = statics.comm_bytes[jnp.arange(J), st.phase_idx]  # [J]
+    enter_f = enter_comm[statics.f2j]
+    quota_f = (phase_bytes_job[statics.f2j] * statics.spj_inv)
+    to_send = jnp.where(enter_f, quota_f, st.to_send)
+    to_deliver = jnp.where(enter_f, quota_f, st.to_deliver)
+    comm_start = jnp.where(enter_f, t, st.comm_start)
+
+    # ------------------------------------------------------------------
+    # 2. Injection at current CC rate
+    # ------------------------------------------------------------------
+    rate = core.send_rate(cfg.protocol.cc, st.proto.cc)          # [N] bytes/s
+    active = in_comm[statics.f2j] & (to_send > 0.0)
+    inj = jnp.where(active, jnp.minimum(rate * dt, to_send), 0.0)
+    to_send = to_send - inj
+
+    # ------------------------------------------------------------------
+    # 3. Links: enqueue (RED) -> serve -> route departures
+    # ------------------------------------------------------------------
+    incoming = st.transit
+    incoming = incoming.at[statics.first_link, arange_n].add(inj)
+    incoming = incoming.at[M].set(0.0)                           # trash row
+
+    q_len = st.backlog[:M].sum(axis=1)                           # [M]
+    p_red = _red_prob(cfg, q_len)                                # [M]
+    p_full = jnp.concatenate([p_red, jnp.zeros((1,), p_red.dtype)])
+    # taildrop on buffer overflow (both modes)
+    overflow = jnp.concatenate([
+        (q_len >= cfg.buffer_bytes).astype(jnp.float32), jnp.zeros((1,))])
+
+    if cfg.is_ecn():
+        marked = incoming * p_full[:, None]
+        drop_frac = overflow[:, None]
+    else:
+        marked = jnp.zeros_like(incoming)
+        drop_frac = jnp.minimum(p_full[:, None] + overflow[:, None], 1.0)
+
+    dropped = incoming * drop_frac
+    kept = incoming - dropped
+    backlog = st.backlog + kept
+
+    tot = backlog[:M].sum(axis=1)
+    serve_ratio = jnp.where(tot > 0.0,
+                            jnp.minimum(1.0, statics.cap * dt / jnp.maximum(tot, 1e-9)),
+                            0.0)
+    serve_full = jnp.concatenate([serve_ratio, jnp.zeros((1,))])
+    dep = backlog * serve_full[:, None]
+    backlog = backlog - dep
+    backlog = backlog.at[M].set(0.0)
+
+    # route departures: next_link == M means delivered
+    is_final = statics.next_link == M                            # [M+1, N]
+    delivered = jnp.sum(dep * is_final, axis=0)                  # [N]
+    fwd = dep * (~is_final)
+    transit = jnp.zeros_like(st.transit).at[
+        statics.next_link.reshape(-1), jnp.tile(arange_n, M + 1)
+    ].add(fwd.reshape(-1))
+    transit = transit.at[M].set(0.0)
+
+    # per-flow drop / mark signals
+    dropped_f = dropped.sum(axis=0)                              # [N] bytes
+    marked_f = marked.sum(axis=0)
+    loss_evt = jax.random.uniform(k_loss, (N,)) < -jnp.expm1(-dropped_f / mss)
+    cnp_evt = jax.random.uniform(k_cnp, (N,)) < -jnp.expm1(-marked_f / mss)
+    # dropped bytes must be retransmitted
+    to_send = to_send + dropped_f
+
+    # ------------------------------------------------------------------
+    # 4. Feedback delay line (acks/loss/CNP arrive one RTT later)
+    # ------------------------------------------------------------------
+    ptr = st.ring_ptr
+    fb_del = st.ring_del[ptr]
+    fb_loss = st.ring_loss[ptr]
+    fb_cnp = st.ring_cnp[ptr]
+    ring_del = st.ring_del.at[ptr].set(delivered)
+    ring_loss = st.ring_loss.at[ptr].set(loss_evt)
+    ring_cnp = st.ring_cnp.at[ptr].set(cnp_evt)
+    ring_ptr = (ptr + 1) % cfg.rtt_ticks
+
+    # ------------------------------------------------------------------
+    # 5. Byte accounting & comm-phase completion
+    # ------------------------------------------------------------------
+    to_deliver = jnp.maximum(to_deliver - delivered, 0.0)
+    flow_done = (to_deliver <= 0.5 * mss).astype(jnp.int32)
+    job_all_done = jnp.ones((J,), jnp.int32).at[statics.f2j].min(flow_done) > 0
+    comm_done = in_comm & job_all_done
+
+    last_phase = st.phase_idx >= (statics.n_phases - 1)
+    iter_done = comm_done & last_phase
+    phase_idx = jnp.where(comm_done, jnp.where(last_phase, 0, st.phase_idx + 1),
+                          st.phase_idx)
+    in_comm = in_comm & ~comm_done
+
+    # iteration bookkeeping + straggler sampling for the next iteration
+    iter_time = t - st.iter_start
+    iter_times = st.iter_times.at[
+        jnp.arange(J), jnp.minimum(st.iter_idx, cfg.max_iters_recorded - 1)
+    ].set(jnp.where(iter_done, iter_time,
+                    st.iter_times[jnp.arange(J),
+                                  jnp.minimum(st.iter_idx,
+                                              cfg.max_iters_recorded - 1)]))
+    iter_idx = st.iter_idx + iter_done.astype(jnp.int32)
+    iter_start = jnp.where(iter_done, t, st.iter_start)
+
+    straggles = (jax.random.uniform(k_strag, (J,)) < statics.straggle_prob)
+    strag_amt = jax.random.uniform(k_samt, (J,), minval=0.05, maxval=0.10) \
+        * statics.iso_iter
+    straggle_extra = jnp.where(iter_done,
+                               jnp.where(straggles, strag_amt, 0.0),
+                               st.straggle_extra)
+
+    next_compute = statics.compute[jnp.arange(J), phase_idx]
+    t_rem = jnp.where(comm_done,
+                      next_compute + jnp.where(iter_done, straggle_extra, 0.0),
+                      t_rem)
+
+    # ------------------------------------------------------------------
+    # 6. Protocol update (MLTCP / baselines) on delayed feedback
+    # ------------------------------------------------------------------
+    fb = core.Feedback(num_acks=fb_del / mss, loss=fb_loss, cnp=fb_cnp, now=t)
+    flow_total = jnp.where(
+        jnp.asarray(cfg.protocol.aggregate_by_job),
+        statics.job_total_bytes[statics.f2j],
+        statics.job_total_bytes[statics.f2j] * statics.spj_inv)
+    comm_elapsed = jnp.clip((t - comm_start) / statics.period[statics.f2j],
+                            0.0, 1.0)
+    est_finish = jnp.clip(to_deliver / jnp.maximum(rate, 1.0)
+                          / statics.period[statics.f2j], 0.0, 1.0)
+
+    tick_fn = core.cc_tick
+    if cfg.use_pallas_kernel:
+        from repro.kernels import ops as kernel_ops
+        tick_fn = kernel_ops.mltcp_cc_tick
+    proto, _ = tick_fn(
+        cfg.protocol, st.proto, fb, flow_total,
+        flow_to_job=statics.f2j, n_jobs=J,
+        static_factors=statics.static_factors,
+        comm_elapsed=comm_elapsed, est_finish=est_finish)
+
+    # CUBIC epoch reset on comm start (idle handling; see DESIGN.md)
+    if (cfg.cubic_epoch_reset_on_comm_start
+            and cfg.protocol.cc.algo == int(core.Algo.CUBIC)):
+        cc = proto.cc._replace(
+            epoch_start=jnp.where(enter_f, t, proto.cc.epoch_start),
+            w_max=jnp.where(enter_f, proto.cc.cwnd, proto.cc.w_max))
+        proto = proto._replace(cc=cc)
+
+    # ------------------------------------------------------------------
+    # 7. Trace accumulators
+    # ------------------------------------------------------------------
+    acc_util = st.acc_util + dep[:M].sum(axis=1) / (statics.cap * dt)
+    acc_drops = st.acc_drops + dropped_f.sum() / mss
+    acc_marks = st.acc_marks + marked_f.sum() / mss
+    acc_jobbytes = st.acc_jobbytes.at[statics.f2j].add(delivered)
+
+    return EngineState(
+        proto=proto, backlog=backlog, transit=transit,
+        ring_del=ring_del, ring_loss=ring_loss, ring_cnp=ring_cnp,
+        ring_ptr=ring_ptr,
+        to_send=to_send, to_deliver=to_deliver, comm_start=comm_start,
+        phase_idx=phase_idx, in_comm=in_comm, t_rem=t_rem,
+        iter_idx=iter_idx, iter_start=iter_start, hold_until=hold_until,
+        iter_times=iter_times, straggle_extra=straggle_extra,
+        key=key, tick=st.tick + 1,
+        acc_util=acc_util, acc_drops=acc_drops, acc_marks=acc_marks,
+        acc_jobbytes=acc_jobbytes,
+    ), None
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+class RawSimOutput(NamedTuple):
+    iter_times: Array     # [J, MAX_ITERS] seconds (nan where unset)
+    iter_counts: Array    # [J]
+    trace_util: Array     # [n_chunks, M] mean utilization per chunk
+    trace_drops: Array    # [n_chunks] packets per chunk
+    trace_marks: Array    # [n_chunks]
+    trace_incomm: Array   # [n_chunks, J] bool snapshot
+    trace_t: Array        # [n_chunks] chunk end times
+    trace_jobtput: Array  # [n_chunks, J] delivered bytes/s per job
+    trace_ratio: Array    # [n_chunks, J] mean bytes_ratio snapshot per job
+    final_state: EngineState
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _run(cfg: SimConfig, key: Array) -> RawSimOutput:
+    statics = _build_statics(cfg)
+    st = _init_state(cfg, statics)._replace(key=key)
+    ticks_per_chunk = max(1, cfg.n_ticks // cfg.n_chunks)
+    n_chunks = cfg.n_ticks // ticks_per_chunk
+    tick = partial(_tick, cfg, statics)
+
+    def chunk(st: EngineState, _):
+        st = st._replace(acc_util=jnp.zeros_like(st.acc_util),
+                         acc_drops=jnp.asarray(0.0, jnp.float32),
+                         acc_marks=jnp.asarray(0.0, jnp.float32),
+                         acc_jobbytes=jnp.zeros_like(st.acc_jobbytes))
+        st, _ = jax.lax.scan(tick, st, None, length=ticks_per_chunk)
+        n_jobs = st.acc_jobbytes.shape[0]
+        flows_per_job = jnp.zeros((n_jobs,)).at[statics.f2j].add(1.0)
+        ratio_job = (jnp.zeros((n_jobs,)).at[statics.f2j]
+                     .add(st.proto.det.bytes_ratio) / flows_per_job)
+        out = (st.acc_util / ticks_per_chunk, st.acc_drops, st.acc_marks,
+               st.in_comm, st.tick.astype(jnp.float32) * cfg.dt,
+               st.acc_jobbytes / (ticks_per_chunk * cfg.dt), ratio_job)
+        return st, out
+
+    st, (u, d, m, ic, tt, jt, rj) = jax.lax.scan(chunk, st, None,
+                                                 length=n_chunks)
+    return RawSimOutput(iter_times=st.iter_times, iter_counts=st.iter_idx,
+                        trace_util=u, trace_drops=d, trace_marks=m,
+                        trace_incomm=ic, trace_t=tt, trace_jobtput=jt,
+                        trace_ratio=rj, final_state=st)
+
+
+def simulate(cfg: SimConfig) -> RawSimOutput:
+    """Run one simulation (jitted; retraces per distinct static config)."""
+    if abs(cfg.protocol.cc.tick_dt - cfg.dt) > 1e-12:
+        raise ValueError(
+            f"protocol.cc.tick_dt ({cfg.protocol.cc.tick_dt}) must equal the "
+            f"simulator dt ({cfg.dt}); build CCParams with tick_dt=dt")
+    return _run(cfg, jax.random.PRNGKey(cfg.seed))

@@ -1,0 +1,108 @@
+"""Metrics over raw simulation outputs — the paper's reported quantities.
+
+* per-job training-iteration times (avg / p99 / CDF)  — Figs 7c, 8c, 9c, 11
+* dropped / ECN-marked packets per second             — Figs 7b, 8b, 9b
+* link-utilization traces                             — Figs 7a, 8a, 9a, 14
+* interleave score: pairwise Jaccard overlap of comm phases on shared links
+* speedups vs a baseline run                          — Figs 10, 12, 13
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.netsim.engine import RawSimOutput, SimConfig
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Post-processed, numpy-side view of one simulation."""
+
+    cfg: SimConfig
+    iter_times: list[np.ndarray]      # per job, valid entries only
+    drops_per_s: float
+    marks_per_s: float
+    trace_t: np.ndarray               # [C]
+    trace_util: np.ndarray            # [C, M]
+    trace_incomm: np.ndarray          # [C, J]
+    trace_drops: np.ndarray           # [C]
+    trace_jobtput: np.ndarray         # [C, J] delivered bytes/s per job
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.iter_times)
+
+    def avg_iter(self, job: int, warmup: int = 5) -> float:
+        x = self.iter_times[job][warmup:]
+        return float(np.mean(x)) if x.size else float("nan")
+
+    def p99_iter(self, job: int, warmup: int = 5) -> float:
+        x = self.iter_times[job][warmup:]
+        return float(np.percentile(x, 99)) if x.size else float("nan")
+
+    def all_iters(self, warmup: int = 5) -> np.ndarray:
+        xs = [x[warmup:] for x in self.iter_times if x.size > warmup]
+        return np.concatenate(xs) if xs else np.asarray([])
+
+
+def postprocess(cfg: SimConfig, raw: RawSimOutput) -> SimResult:
+    it = np.asarray(raw.iter_times)
+    counts = np.asarray(raw.iter_counts)
+    per_job = [it[j, : int(min(counts[j], it.shape[1]))] for j in range(it.shape[0])]
+    per_job = [x[~np.isnan(x)] for x in per_job]
+    sim_t = float(np.asarray(raw.trace_t)[-1]) if raw.trace_t.size else cfg.sim_time
+    return SimResult(
+        cfg=cfg,
+        iter_times=per_job,
+        drops_per_s=float(np.asarray(raw.trace_drops).sum() / max(sim_t, 1e-9)),
+        marks_per_s=float(np.asarray(raw.trace_marks).sum() / max(sim_t, 1e-9)),
+        trace_t=np.asarray(raw.trace_t),
+        trace_util=np.asarray(raw.trace_util),
+        trace_incomm=np.asarray(raw.trace_incomm),
+        trace_drops=np.asarray(raw.trace_drops),
+        trace_jobtput=np.asarray(raw.trace_jobtput),
+    )
+
+
+def iteration_times(cfg: SimConfig, raw: RawSimOutput) -> list[np.ndarray]:
+    return postprocess(cfg, raw).iter_times
+
+
+def interleave_score(res: SimResult, job_a: int, job_b: int,
+                     tail_frac: float = 0.5) -> float:
+    """Jaccard overlap of two jobs' comm phases over the trace tail.
+
+    0.0 = perfectly interleaved, 1.0 = fully synchronized. The paper's
+    convergence claim: MLTCP drives this toward ~0 within ~10 iterations,
+    so we score the tail (post-convergence) portion of the run.
+    """
+    ic = res.trace_incomm
+    start = int(ic.shape[0] * (1.0 - tail_frac))
+    a = ic[start:, job_a].astype(bool)
+    b = ic[start:, job_b].astype(bool)
+    union = np.logical_or(a, b).sum()
+    if union == 0:
+        return 0.0
+    return float(np.logical_and(a, b).sum() / union)
+
+
+def mean_pairwise_interleave(res: SimResult, tail_frac: float = 0.5) -> float:
+    j = res.trace_incomm.shape[1]
+    scores = [interleave_score(res, a, b, tail_frac)
+              for a in range(j) for b in range(a + 1, j)]
+    return float(np.mean(scores)) if scores else 0.0
+
+
+def speedup_stats(base: SimResult, test: SimResult,
+                  warmup: int = 5) -> dict[str, float]:
+    """Training-iteration-time speedups of ``test`` over ``base`` (paper's
+    headline metric): ratio of avg and p99 iteration times across all jobs."""
+    b, t = base.all_iters(warmup), test.all_iters(warmup)
+    return {
+        "avg_speedup": float(np.mean(b) / np.mean(t)),
+        "p99_speedup": float(np.percentile(b, 99) / np.percentile(t, 99)),
+        "base_avg": float(np.mean(b)), "test_avg": float(np.mean(t)),
+        "base_p99": float(np.percentile(b, 99)),
+        "test_p99": float(np.percentile(t, 99)),
+    }

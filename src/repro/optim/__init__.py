@@ -1,0 +1,14 @@
+"""optim — AdamW + schedules + distributed-optimization tricks."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    CompressionConfig,
+    compress_gradients,
+    init_error_feedback,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "CompressionConfig", "compress_gradients", "init_error_feedback",
+]

@@ -1,0 +1,75 @@
+"""AdamW with configurable state dtypes.
+
+``state_dtype="bfloat16"`` halves the optimizer-state footprint (the trick
+that fits llama4-maverick-400b's states on a 16 GB/chip v5e pod; cf.
+DeepSeek-V3's bf16 Adam moments).  All math runs in float32 regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"       # "bfloat16" halves m/v memory
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, state: AdamWState, params: Any, grads: Any,
+                 lr_scale: Array | float = 1.0) -> tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    treedef = jax.tree.structure(params)
+    leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    newm = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    newv = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    return newp, AdamWState(step=step, m=newm, v=newv), {"grad_norm": gnorm}

@@ -1,0 +1,6 @@
+"""roofline — TPU-v5e roofline terms from compiled dry-run artifacts."""
+
+from repro.roofline.hw import V5E
+from repro.roofline.hlo import collective_bytes_from_text
+
+__all__ = ["V5E", "collective_bytes_from_text"]

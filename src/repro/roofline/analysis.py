@@ -1,0 +1,181 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape) on the single-pod mesh, derive the three roofline terms:
+
+  compute    = HLO_FLOPs_per_device            / peak_FLOP/s        (197e12)
+  memory     = HLO_bytes_accessed_per_device   / HBM_bw             (819e9)
+  collective = collective_bytes_per_device     / ICI_link_bw        (50e9)
+
+XLA's cost analysis counts a scanned while-body ONCE, so the full scanned
+compile undercounts by ~n_groups.  We therefore lower the same cell with the
+layer loop *unrolled* at G=1 and G=2 groups (same lead/tail/loss/optimizer
+"stem"), solve cost(G) = stem + G*body exactly, and extrapolate to the full
+depth.  Memory fit comes from the full scanned dry-run record (dryrun.json).
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.analysis \
+      --dryrun results/dryrun.json --out results/roofline.json
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_skip_reason
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.roofline.hlo import collective_bytes_from_text
+from repro.roofline.hw import V5E
+
+
+def _reduced_cfg(cfg, n_groups: int):
+    """Same lead/tail structure, n_groups repetitions of the pattern."""
+    lead = cfg.first_k_dense
+    plen = len(cfg.block_pattern)
+    full_rest = cfg.n_layers - lead
+    tail = full_rest - (full_rest // plen) * plen
+    n_layers = lead + n_groups * plen + tail
+    enc = cfg.enc_layers
+    red = dataclasses.replace(cfg, n_layers=n_layers,
+                              enc_layers=min(enc, n_groups * plen) if enc
+                              else 0)
+    return red
+
+
+def _measure(cfg, shape_name: str, mesh, rules=None) -> dict:
+    # microbatches=1: the gradient-accumulation lax.scan body would also be
+    # counted once by cost analysis; the roofline lower must see every op.
+    hyper = dataclasses.replace(dr.train_hyper_for(cfg.name),
+                                microbatches=1, unroll=True)
+    fn, args, in_sh, out_sh, donate = dr.build_cell(cfg, shape_name, mesh,
+                                                    rules=rules, unroll=True,
+                                                    hyper_override=hyper)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    colls = collective_bytes_from_text(compiled.as_text())
+    return {
+        "flops": ca.get("flops", 0.0),
+        "bytes": ca.get("bytes accessed", 0.0),
+        "coll_bytes": colls["total_bytes"],
+        "coll_by_kind": colls["bytes_by_kind"],
+    }
+
+
+def _extrapolate(m1: dict, m2: dict, g_full: int) -> dict:
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        body = m2[key] - m1[key]
+        stem = m1[key] - body
+        out[key] = max(stem + g_full * body, 0.0)
+        out[key + "_body"] = body
+        out[key + "_stem"] = stem
+    kinds = set(m1["coll_by_kind"]) | set(m2["coll_by_kind"])
+    out["coll_by_kind"] = {}
+    for k in kinds:
+        b = m2["coll_by_kind"].get(k, 0.0) - m1["coll_by_kind"].get(k, 0.0)
+        s = m1["coll_by_kind"].get(k, 0.0) - b
+        out["coll_by_kind"][k] = s + g_full * b
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens/step."""
+    n = transformer.active_param_count(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch          # decode: 1 token per seq
+
+
+def roofline_cell(arch: str, shape_name: str, hw=V5E,
+                  verbose: bool = True, rules=None, label: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name}
+    skip = shape_skip_reason(cfg, shape_name)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = mesh.devices.size
+    try:
+        plen = len(cfg.block_pattern)
+        g_full = (cfg.n_layers - cfg.first_k_dense) // plen
+        m1 = _measure(_reduced_cfg(cfg, 1), shape_name, mesh, rules)
+        m2 = _measure(_reduced_cfg(cfg, 2), shape_name, mesh, rules)
+        full = _extrapolate(m1, m2, g_full)
+
+        t_comp = full["flops"] / hw.peak_flops_bf16
+        t_mem = full["bytes"] / hw.hbm_bw
+        t_coll = full["coll_bytes"] / hw.ici_link_bw
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        hlo_total = full["flops"] * n_chips
+        rec.update({
+            "status": "ok",
+            "mesh": "16x16",
+            "flops_per_device": full["flops"],
+            "bytes_per_device": full["bytes"],
+            "coll_bytes_per_device": full["coll_bytes"],
+            "coll_by_kind": full["coll_by_kind"],
+            "t_compute_s": t_comp,
+            "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / hlo_total if hlo_total else 0.0,
+            "roofline_bound_s": max(terms.values()),
+            "step_lower_bound_s": max(terms.values()),
+        })
+        if label:
+            rec["label"] = label
+        if verbose:
+            print(f"{arch:28s} {shape_name:12s} comp={t_comp*1e3:8.2f}ms "
+                  f"mem={t_mem*1e3:8.2f}ms coll={t_coll*1e3:8.2f}ms "
+                  f"dom={dominant:10s} useful={rec['useful_flops_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+        if verbose:
+            print(f"{arch} x {shape_name}: FAILED {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    archs = (args.arch,) if args.arch else ARCH_IDS
+    shapes = (args.shape,) if args.shape else tuple(SHAPES)
+    records = [roofline_cell(a, s) for a in archs for s in shapes]
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"roofline: {n_ok} ok, {n_err} failed")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb harness (EXPERIMENTS.md §Perf).
+
+Three cells chosen from the baseline roofline table:
+  A. qwen1.5-4b  x train_4k   — worst roofline fraction (memory term blows up
+     because 20 heads can't shard on the 16-way model axis; every device
+     materializes all-head [T, S] attention probs),
+  B. qwen3-1.7b  x decode_32k — most collective-bound (the GQA head repeat
+     makes the partitioner all-gather the whole KV cache every step),
+  C. qwen3-1.7b  x train_4k   — representative of the paper's subject
+     (data-parallel training whose gradient/activation collectives are the
+     traffic MLTCP schedules).
+
+Each experiment: hypothesis -> change -> re-lower -> measure -> verdict,
+appended to results/hillclimb.json.
+"""
+import json
+
+from repro.models import attention, moe
+from repro.roofline.analysis import roofline_cell
+from repro.train.sharding import ShardingRules
+
+
+def _delta(base, new, key):
+    b, n = base[key], new[key]
+    return f"{b * 1e3:.1f}ms -> {n * 1e3:.1f}ms ({b / max(n, 1e-12):.2f}x)"
+
+
+def experiment(records, name, arch, shape, hypothesis, rules=None,
+               seq_shard=None, grouped_gqa=None, dispatch=None,
+               ep_axis=None, baseline=None):
+    prev_axis = attention.SEQ_SHARD_AXIS
+    prev_gqa = attention.DECODE_GROUPED_GQA
+    prev_disp = moe.DISPATCH_MODE
+    prev_ep = moe.EP_CONSTRAINT_AXIS
+    if seq_shard is not None:
+        attention.SEQ_SHARD_AXIS = seq_shard
+    if grouped_gqa is not None:
+        attention.DECODE_GROUPED_GQA = grouped_gqa
+    if dispatch is not None:
+        moe.DISPATCH_MODE = dispatch
+    if ep_axis is not None:
+        moe.EP_CONSTRAINT_AXIS = ep_axis
+    try:
+        rec = roofline_cell(arch, shape, rules=rules, label=name)
+    finally:
+        attention.SEQ_SHARD_AXIS = prev_axis
+        attention.DECODE_GROUPED_GQA = prev_gqa
+        moe.DISPATCH_MODE = prev_disp
+        moe.EP_CONSTRAINT_AXIS = prev_ep
+    rec["hypothesis"] = hypothesis
+    if baseline is not None and rec.get("status") == "ok":
+        dom = baseline["dominant"]
+        key = f"t_{dom}_s"
+        rec["dominant_term_delta"] = _delta(baseline, rec, key)
+        rec["bound_delta"] = _delta(baseline, rec, "roofline_bound_s")
+        print(f"    => {name}: dominant({dom}) {rec['dominant_term_delta']}")
+    records.append(rec)
+    return rec
+
+
+def main():
+    records = []
+
+    # =====================================================================
+    # Cell A: qwen1.5-4b x train_4k (worst roofline fraction, memory-bound)
+    # =====================================================================
+    print("=== Cell A: qwen1.5-4b train_4k ===")
+    a0 = experiment(
+        records, "A0-baseline", "qwen1.5-4b", "train_4k",
+        "baseline: dh-sharded attention (20 heads % 16 != 0) leaves all-head "
+        "[B,T,S] probs per device; expect memory-dominated",
+        grouped_gqa=False)
+    experiment(
+        records, "A1-seq-parallel-attn", "qwen1.5-4b", "train_4k",
+        "napkin: probs bytes ~ B*H*T*S*4 per device; sharding the query/"
+        "sequence axis of the scores over the 16-way model axis divides the "
+        "dominant bytes term by ~16 at the cost of one KV all-gather per "
+        "layer (~B*S*K*dh*2 bytes, ~100x smaller)",
+        seq_shard="model", grouped_gqa=False, baseline=a0)
+
+    # =====================================================================
+    # Cell B: qwen3-1.7b x decode_32k (most collective-bound)
+    # =====================================================================
+    print("=== Cell B: qwen3-1.7b decode_32k ===")
+    b0 = experiment(
+        records, "B0-baseline", "qwen3-1.7b", "decode_32k",
+        "baseline: jnp.repeat KV-head expansion gathers the 2 GiB KV cache "
+        "per decoded token; expect collective-dominated",
+        grouped_gqa=False)
+    b1 = experiment(
+        records, "B1-grouped-gqa", "qwen3-1.7b", "decode_32k",
+        "napkin: grouped einsum q[B,1,K,g,dh] x cache[B,S,K,dh] needs no "
+        "expanded KV; the only collective left should be the psum over the "
+        "dh-sharded contraction (~B*H*S*4 bytes, ~1000x less than the cache)",
+        grouped_gqa=True, baseline=b0)
+    # B1 verdict: CONFIRMED direction but only 2x — the dh-sharded cache
+    # still forces partial gathers. Revised: shard the cache on its
+    # *sequence* axis (context-parallel decode): each model rank holds
+    # 1/16th of the context; only the [B,H,S] scores cross devices.
+    experiment(
+        records, "B2-seq-sharded-cache", "qwen3-1.7b", "decode_32k",
+        "napkin: seq-sharded cache leaves per-step collectives ~ scores "
+        "(B*H*S*4 ~ 270 MB) + psum of out (~B*H*dh, KB) instead of "
+        "cache-sized gathers; expect another >=2x on the collective term",
+        grouped_gqa=True,
+        rules=ShardingRules(data_axes=("data",), decode_cache_seq_shard=True),
+        baseline=b1)
+
+    # =====================================================================
+    # Cell C: qwen3-1.7b x train_4k (the paper's own workload shape)
+    # =====================================================================
+    print("=== Cell C: qwen3-1.7b train_4k ===")
+    c0 = experiment(
+        records, "C0-baseline", "qwen3-1.7b", "train_4k",
+        "baseline: 16-way tensor parallelism all-reduces every layer's "
+        "activations fwd+bwd (~4*B*T*D*28 bytes >> the 1.7B model's own "
+        "gradients); expect collective/memory-bound",
+        grouped_gqa=False)
+    fsdp = ShardingRules(fsdp=True, data_axes=("data",))
+    c1 = experiment(
+        records, "C1-fsdp-over-tp", "qwen3-1.7b", "train_4k",
+        "napkin: adding data-sharding to the TP weights (ZeRO on top of TP) "
+        "— prediction: ~4x collective reduction from replacing activation "
+        "ARs with weight AGs",
+        rules=fsdp, baseline=c0)
+    c2 = experiment(
+        records, "C2-fsdp+seq-attn", "qwen3-1.7b", "train_4k",
+        "stack A1's sequence-parallel attention on top of C1 to also cut "
+        "the memory term (probs sharded 16-way)",
+        rules=fsdp, seq_shard="model", baseline=c1)
+    # C1 verdict: REFUTED — ZeRO on top of TP leaves the dominant
+    # activation all-reduces untouched. Revised hypothesis: the TP itself
+    # is the problem for a 1.7B model; go *pure* FSDP (no model-sharded
+    # weights; all 256 chips act as data shards, batch 1/device).
+    pure_fsdp = ShardingRules(fsdp=True, tensor_parallel=False,
+                              data_axes=("data", "model"))
+    experiment(
+        records, "C3-pure-fsdp", "qwen3-1.7b", "train_4k",
+        "napkin: pure FSDP moves 3x params/step (2 AG + 1 RS ~ 20 GB "
+        "global, ~80 MB/device) vs TP's ~150 GB/device activation ARs; "
+        "expect the collective term to collapse by >10x",
+        rules=pure_fsdp, baseline=c0)
+
+    # =====================================================================
+    # Cell D (beyond the required three): deepseek-moe-16b x train_4k —
+    # the MoE-dispatch pathology surfaced by the baseline table
+    # =====================================================================
+    print("=== Cell D: deepseek-moe-16b train_4k (MoE dispatch) ===")
+    d0 = experiment(
+        records, "D0-baseline-cumsum-dispatch", "deepseek-moe-16b",
+        "train_4k",
+        "baseline: one-hot cumsum dispatch builds an [N*k, E] intermediate "
+        "and O(N*E) prefix work per MoE layer at N=1M tokens; expect it to "
+        "dominate all three terms",
+        dispatch="cumsum", grouped_gqa=False)
+    d1 = experiment(
+        records, "D1-sort-dispatch", "deepseek-moe-16b", "train_4k",
+        "napkin: stable argsort dispatch is O(N*k log N*k) with no [N, E] "
+        "intermediate; expert matmuls (top_k*N*3*2*d*de*cf ~ 1.3e14/layer) "
+        "should become the dominant compute; expect >10x drop in the "
+        "memory/compute terms",
+        dispatch="sort", grouped_gqa=False, baseline=d0)
+    # D1 verdict: CONFIRMED on compute (9.7x) — but the collective term is
+    # untouched: GSPMD replicates the [E, C, d] expert buffer and
+    # all-reduces it every layer. Revised: pin the buffer to the expert-
+    # parallel axis with an explicit sharding constraint.
+    experiment(
+        records, "D2-sort+ep-constraint", "deepseek-moe-16b", "train_4k",
+        "napkin: constraining eb/out to P('model', ...) turns the buffer "
+        "all-reduce (~30 GB/layer) into a dispatch all-to-all (~N*d*2 "
+        "bytes ~ 4 GB/layer global); expect >5x on the collective term",
+        dispatch="sort", ep_axis="model", grouped_gqa=False, baseline=d1)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/hillclimb.json", "w") as f:
+        json.dump(records, f, indent=1)
+    print("wrote results/hillclimb.json")
+
+
+if __name__ == "__main__":
+    main()

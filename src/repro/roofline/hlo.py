@@ -1,0 +1,71 @@
+"""HLO-text parsing: collective-communication bytes.
+
+`compiled.cost_analysis()` does not report collective traffic, so we parse
+the (SPMD-partitioned) HLO text and sum operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Caveat handled by the caller (repro.roofline.analysis): ops inside a `while`
+body appear once in the text regardless of trip count; the roofline table is
+therefore built from unrolled L=1/L=2 lowers where every op instance is
+visible, while dry-run records report the raw per-text totals alongside the
+schedule (op kinds + counts).
+"""
+from __future__ import annotations
+
+import re
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g. "f32[16,128]{1,0}" or "bf16[8,16,128]"
+_TENSOR = re.compile(r"\b(\w+)\[([\d,]*)\]")
+# an HLO instruction line: "%name = <result shape(s)> <op>(...)".
+# Optimized HLO prints operands as bare %names, so bytes come from the
+# RESULT shape(s) between '=' and the op mnemonic.
+_INSTR = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather-start|all-reduce-start|collective-permute-start|"
+    r"all-gather-done|all-reduce-done|collective-permute-done|"
+    r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_text(txt: str) -> dict:
+    """Sum result-tensor bytes per collective kind over the whole HLO text.
+
+    `-done` halves of async pairs are skipped (their `-start` already counted
+    the payload).
+    """
+    count: dict[str, int] = {k: 0 for k in _KINDS}
+    total: dict[str, float] = {k: 0.0 for k in _KINDS}
+    for line in txt.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        kind = op.replace("-start", "")
+        results = m.group(1)
+        b = sum(_tensor_bytes(d, s) for d, s in _TENSOR.findall(results))
+        count[kind] += 1
+        total[kind] += b
+    return {
+        "count_by_kind": {k: v for k, v in count.items() if v},
+        "bytes_by_kind": {k: round(v, 1) for k, v in total.items() if v},
+        "total_bytes": float(sum(total.values())),
+    }

@@ -1,0 +1,17 @@
+"""train — loss/step factories, sharding rules, serving steps."""
+
+from repro.train.sharding import param_pspecs, batch_pspec, ShardingRules
+from repro.train.train_step import (
+    TrainState,
+    TrainHyper,
+    init_train_state,
+    make_train_step,
+    loss_fn,
+)
+from repro.train.serve_step import make_prefill_step, make_decode_step
+
+__all__ = [
+    "param_pspecs", "batch_pspec", "ShardingRules",
+    "TrainState", "TrainHyper", "init_train_state", "make_train_step",
+    "loss_fn", "make_prefill_step", "make_decode_step",
+]

@@ -1,0 +1,47 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token/step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, use_kernel: bool = False,
+                      unroll: bool = False):
+    def prefill_step(params, batch: dict):
+        logits, cache = api.prefill(cfg, params, batch, max_len,
+                                    use_kernel=use_kernel, unroll=unroll)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, greedy: bool = True,
+                     unroll: bool = False):
+    def decode_step(params, cache: dict, token: Array, index: Array):
+        logits, cache = api.decode_step(cfg, params, cache, token, index,
+                                        unroll=unroll)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode_step
+
+
+def generate(cfg: ModelConfig, params, batch: dict, max_new: int,
+             max_len: int) -> Array:
+    """Greedy generation loop (used by examples/serve.py)."""
+    tok, cache = make_prefill_step(cfg, max_len)(params, batch)
+    start = batch["tokens"].shape[1]
+    step = make_decode_step(cfg)
+    out = [tok]
+
+    def body(carry, i):
+        tok, cache = carry
+        tok, cache = step(params, cache, tok, start + i)
+        return (tok, cache), tok
+
+    (_, _), toks = jax.lax.scan(body, (tok, cache), jnp.arange(max_new - 1))
+    return jnp.concatenate([out[0][None], toks], axis=0).T  # [B, max_new]

@@ -1,0 +1,202 @@
+"""Sharding rules: parameter-path -> PartitionSpec over the production mesh.
+
+Mesh axes: ("pod",) "data", "model".  The batch shards over (pod, data);
+tensor/expert parallelism over "model".  Rules are name+parent based with
+shape-aware fallbacks: e.g. attention projections shard the head axis when
+head-count divides the model axis, else the head_dim axis, else the model
+dim, else replicate (qwen3 kv=8 and llama4 H=40 don't divide 16; internvl's
+vocab 151655 is odd, so its embedding shards d_model instead).
+
+An optional FSDP mode additionally shards the big matrices over "data"
+(ZeRO-3-style; a hillclimb lever, not the baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    fsdp: bool = False
+    data_axes: tuple = ("pod", "data")
+    tensor_parallel: bool = True      # False: pure FSDP — the "model" axis
+                                      # joins data_axes and no weight axis
+                                      # is model-sharded (hillclimb C1')
+    decode_cache_seq_shard: bool = False  # shard KV caches on the sequence
+                                          # axis over "model" (hillclimb B2)
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def _pick(shape, prefs, msize):
+    """Assign "model" to the first preferred axis whose dim divides msize."""
+    out = [None] * len(shape)
+    if msize <= 1:                       # tensor parallelism disabled
+        return out
+    for ax in prefs:
+        if ax < len(shape) and _div(shape[ax], msize):
+            out[ax] = "model"
+            return out
+    return out
+
+
+def _with_fsdp(spec, shape, axis, dsize, enabled):
+    if enabled and spec[axis] is None and _div(shape[axis], dsize):
+        spec = list(spec)
+        spec[axis] = "data"
+    return spec
+
+
+def _spec_for(parent: str, name: str, shape, rules: ShardingRules,
+              msize: int, dsize: int):
+    nd = len(shape)
+    f = rules.fsdp
+
+    if name == "embed":                       # [V, D]
+        return _pick(shape, (0, 1), msize)
+    if name == "head":                        # [D, V]
+        return _with_fsdp(_pick(shape, (1, 0), msize), shape, 0, dsize, f)
+    if name == "proj_vision":
+        return [None, None]
+
+    if parent in ("attn", "self_attn", "cross_attn"):
+        if name == "wq" or name == "wk" or name == "wv":   # [D, H, dh]
+            return _with_fsdp(_pick(shape, (1, 2), msize), shape, 0, dsize, f)
+        if name == "wo":                       # [H, dh, D]
+            return _with_fsdp(_pick(shape, (0, 1), msize), shape, 2, dsize, f)
+        if name in ("bq", "bk", "bv"):         # [H, dh]
+            return _pick(shape, (0, 1), msize)
+        return [None] * nd                     # q_norm / k_norm
+
+    if parent in ("ffn", "shared"):
+        if name in ("gate", "up"):             # [D, F]
+            return _with_fsdp(_pick(shape, (1,), msize), shape, 0, dsize, f)
+        if name == "down":                     # [F, D]
+            return _with_fsdp(_pick(shape, (0,), msize), shape, 1, dsize, f)
+
+    if parent == "moe":
+        if name == "router":
+            return [None, None]
+        if name in ("w_gate", "w_up", "w_down"):   # [E, D, F] / [E, F, D]
+            spec = _pick(shape, (0,), msize)       # expert parallel
+            return _with_fsdp(spec, shape, 1, dsize, f)
+
+    if parent == "rec":
+        if name in ("w_lin", "w_x", "w_a", "w_i"):     # [D, Dr]
+            return _with_fsdp(_pick(shape, (1,), msize), shape, 0, dsize, f)
+        if name == "conv_w":                   # [W, Dr]
+            return _pick(shape, (1,), msize)
+        if name == "w_out":                    # [Dr, D]
+            return _with_fsdp(_pick(shape, (0,), msize), shape, 1, dsize, f)
+        if name in ("conv_b", "lam"):          # [Dr]
+            return _pick(shape, (0,), msize)
+
+    if parent == "mlstm":
+        if name in ("w_up", "w_gate", "conv_w"):       # [D, Di] / [W, Di]
+            return _with_fsdp(_pick(shape, (1,), msize), shape, 0, dsize, f)
+        if name in ("wq", "wk", "wv", "w_if"):         # [Di, H, x]
+            return _pick(shape, (0, 2), msize)
+        if name == "b_if":
+            return [None] * nd
+        if name in ("conv_b", "skip", "out_norm"):     # [Di]
+            return _pick(shape, (0,), msize)
+        if name == "w_down":                   # [Di, D]
+            return _with_fsdp(_pick(shape, (0,), msize), shape, 1, dsize, f)
+
+    if parent == "slstm":
+        if name == "w_gates":                  # [D, H, 4, dh]
+            return _pick(shape, (1, 3), msize)
+        if name == "r_gates":                  # [H, 4, dh, dh]
+            return _pick(shape, (0, 3), msize)
+        if name == "b_gates":                  # [H, 4, dh]
+            return _pick(shape, (0, 2), msize)
+        if name in ("ff_gate", "ff_up"):
+            return _with_fsdp(_pick(shape, (1,), msize), shape, 0, dsize, f)
+        if name == "ff_down":
+            return _with_fsdp(_pick(shape, (0,), msize), shape, 1, dsize, f)
+        return [None] * nd                     # conv/out_norm on d_model
+
+    return [None] * nd                         # norms, scalars
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "name"):
+            out.append(str(e.name))
+        else:
+            out.append(str(e))
+    return out
+
+
+_STACKED = ("groups", "enc", "dec")
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh,
+                 rules: ShardingRules = None):
+    """PartitionSpec pytree matching ``params_shape`` (from eval_shape)."""
+    rules = rules or ShardingRules(
+        data_axes=tuple(a for a in mesh.axis_names if a != "model"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get("model", 1) if rules.tensor_parallel else 1
+    dsize = 1
+    for a in rules.data_axes:
+        dsize *= sizes.get(a, 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        stacked = any(n in _STACKED for n in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _spec_for(parent, name, shape, rules, msize, dsize)
+        # FSDP "data" means all data axes; expand tuple axes
+        spec = [rules.data_axes if s == "data" else s for s in spec]
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_pspec(rules: ShardingRules = None) -> P:
+    rules = rules or ShardingRules()
+    return P(rules.data_axes)
+
+
+def auto_pspec(shape, mesh, rules: ShardingRules = None,
+               stacked: bool = False) -> P:
+    """Heuristic spec for activation-like arrays (caches, batches): shard the
+    first divisible axis over the data axes and the next divisible axis over
+    "model". Falls back to replication per-axis."""
+    rules = rules or ShardingRules(
+        data_axes=tuple(a for a in mesh.axis_names if a != "model"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = 1
+    for a in rules.data_axes:
+        dsize *= sizes.get(a, 1)
+    msize = sizes.get("model", 1)
+    spec = [None] * len(shape)
+    start = 1 if stacked else 0
+    # batch-like axis -> data
+    for i in range(start, len(shape)):
+        if _div(shape[i], dsize):
+            spec[i] = rules.data_axes
+            start = i + 1
+            break
+    # model axis: prefer trailing dims (head_dim / kv heads), never the
+    # huge sequence axis of a KV cache
+    for i in reversed(range(start, len(shape))):
+        if spec[i] is None and _div(shape[i], msize) and shape[i] >= msize:
+            spec[i] = "model"
+            break
+    return P(*spec)

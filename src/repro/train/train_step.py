@@ -1,0 +1,122 @@
+"""Training step factory: loss, grads, AdamW, optional microbatching and
+gradient compression — pure functions ready for `jax.jit(in_shardings=...)`
+under the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim import (
+    AdamWConfig,
+    CompressionConfig,
+    adamw_init,
+    adamw_update,
+    compress_gradients,
+    cosine_schedule,
+    init_error_feedback,
+)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    opt: AdamWConfig = AdamWConfig()
+    warmup: int = 100
+    total_steps: int = 10_000
+    aux_weight: float = 0.01           # MoE load-balance loss weight
+    microbatches: int = 1              # gradient accumulation
+    compression: CompressionConfig = CompressionConfig()
+    use_kernel: bool = False
+    remat: bool = True
+    unroll: bool = False               # python-loop layers (roofline lowers)
+    param_dtype: str = "float32"       # "bfloat16" = mixed-precision training
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    residual: Any                      # error feedback (None if no compression)
+    step: Array
+
+
+def init_train_state(cfg: ModelConfig, hyper: TrainHyper, key) -> TrainState:
+    params = api.init_params(cfg, key)
+    dt = jnp.dtype(hyper.param_dtype)
+    params = jax.tree.map(lambda p: p.astype(dt), params)
+    resid = (init_error_feedback(params)
+             if hyper.compression.scheme != "none" else None)
+    return TrainState(params=params, opt=adamw_init(hyper.opt, params),
+                      residual=resid, step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, hyper: TrainHyper
+            ) -> tuple[Array, dict]:
+    logits, aux = api.forward(cfg, params, batch,
+                              use_kernel=hyper.use_kernel, remat=hyper.remat,
+                              unroll=hyper.unroll)
+    tokens = batch["tokens"]
+    # multimodal prefixes (vision tokens) are not scored
+    prefix = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, prefix:]
+    targets = tokens[:, 1:]
+    pred = logits[:, :-1]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = nll.mean()
+    loss = ce + hyper.aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, hyper), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: dict):
+        if hyper.microbatches > 1:
+            # batch arrives pre-split: leaves [mb, gb/mb, ...] so the global
+            # batch axis stays cleanly sharded over the data mesh axes.
+            mb = hyper.microbatches
+            split = batch
+            assert all(x.shape[0] == mb for x in jax.tree.leaves(batch)), \
+                f"microbatched train_step expects leading dim {mb}"
+
+            def acc_fn(carry, mb_batch):
+                (loss, metrics), grads = grads_of(state.params, mb_batch)
+                gsum, lsum = carry
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (gsum, lsum), metrics = jax.lax.scan(acc_fn, (zero, 0.0), split)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grads_of(state.params, batch)
+
+        residual = state.residual
+        if hyper.compression.scheme != "none":
+            grads, residual = compress_gradients(hyper.compression, grads,
+                                                 residual)
+
+        lr_scale = cosine_schedule(state.step, hyper.warmup, hyper.total_steps)
+        params, opt, opt_metrics = adamw_update(hyper.opt, state.opt,
+                                                state.params, grads, lr_scale)
+        new_state = TrainState(params=params, opt=opt, residual=residual,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, **metrics, **opt_metrics,
+                           "lr_scale": lr_scale}
+
+    return train_step

@@ -1,0 +1,24 @@
+"""workload — DNN training jobs as network traffic sources.
+
+Converts model/parallelization descriptions into the per-iteration
+(compute_s, comm_bytes) phase programs the netsim engine runs, plus the
+paper's baseline machinery: compatibility scores, Cassini's centralized
+time-shift scheduler, and the Table-2 snapshot traces.
+"""
+
+from repro.workload.comm_model import (
+    PAPER_MODELS,
+    CommProfile,
+    dp_allreduce_bytes,
+    profile_for,
+    jobspec_from_profiles,
+)
+from repro.workload.compat import compatibility_score, best_offsets
+from repro.workload.cassini import cassini_schedule
+from repro.workload.snapshots import table2_snapshots
+
+__all__ = [
+    "PAPER_MODELS", "CommProfile", "dp_allreduce_bytes", "profile_for",
+    "jobspec_from_profiles", "compatibility_score", "best_offsets",
+    "cassini_schedule", "table2_snapshots",
+]

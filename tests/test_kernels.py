@@ -1,0 +1,192 @@
+"""Pallas kernel validation (interpret mode) against the pure-jnp oracles.
+
+Per the brief: sweep shapes/dtypes per kernel and assert_allclose vs ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Algo,
+    CCParams,
+    Feedback,
+    MLTCPConfig,
+    Variant,
+    cc_tick,
+    init_state,
+)
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, t, s, h, kv, dh, causal, window, softcap, dtype)
+    (2, 128, 128, 4, 4, 64, True, 0, None, jnp.float32),
+    (1, 256, 256, 4, 2, 64, True, 0, None, jnp.float32),
+    (2, 128, 128, 4, 1, 32, True, 0, None, jnp.float32),     # MQA + pad dh
+    (1, 256, 256, 2, 2, 128, True, 64, None, jnp.float32),   # sliding window
+    (1, 128, 128, 2, 2, 64, True, 0, 50.0, jnp.float32),     # softcap
+    (2, 128, 128, 4, 4, 64, False, 0, None, jnp.float32),    # bidirectional
+    (1, 192, 192, 2, 2, 64, True, 0, None, jnp.float32),     # non-pow2 T pad
+    (2, 128, 128, 4, 4, 64, True, 0, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    b, t, s, h, kv, dh, causal, window, softcap, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal, window, softcap)
+    want = ref.ref_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, True, 0, None) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.ref_attention(q, k, v) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+RGLRU_CASES = [
+    (2, 64, 128, jnp.float32),
+    (1, 128, 256, jnp.float32),
+    (3, 33, 130, jnp.float32),     # ragged D -> pad
+    (2, 64, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rg_lru_matches_ref(case):
+    b, t, d, dtype = case
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], (b, t, d), dtype, 0.2, 0.99)
+    x = jax.random.normal(ks[1], (b, t, d), dtype)
+    out = ops.rg_lru(a, x)
+    want = ref.ref_rg_lru(a, x)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_rg_lru_grad_matches_ref():
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], (2, 32, 128), jnp.float32, 0.2, 0.99)
+    x = jax.random.normal(ks[1], (2, 32, 128))
+    gk = jax.grad(lambda a, x: jnp.sum(ops.rg_lru(a, x) ** 2),
+                  argnums=(0, 1))(a, x)
+    gr = jax.grad(lambda a, x: jnp.sum(ref.ref_rg_lru(a, x) ** 2),
+                  argnums=(0, 1))(a, x)
+    for g1, g2 in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused protocol tick
+# ---------------------------------------------------------------------------
+
+def _random_protocol_state(n, cfg, key):
+    st = init_state(n, cfg)
+    ks = jax.random.split(key, 12)
+    det = st.det._replace(
+        bytes_sent=jax.random.uniform(ks[0], (n,)) * 1e8,
+        bytes_ratio=jax.random.uniform(ks[1], (n,)),
+        prev_ack_tstamp=jax.random.uniform(ks[2], (n,)) * 0.01,
+        iter_gap=jax.random.uniform(ks[3], (n,), minval=1e-3, maxval=0.05),
+        max_gap=jax.random.uniform(ks[4], (n,), minval=1e-3, maxval=0.05),
+    )
+    cc = st.cc._replace(
+        cwnd=jax.random.uniform(ks[5], (n,), minval=1.0, maxval=500.0),
+        ssthresh=jax.random.uniform(ks[6], (n,), minval=10.0, maxval=1e4),
+        cooldown=jax.random.uniform(ks[7], (n,)) * 2e-4,
+        w_max=jax.random.uniform(ks[8], (n,), minval=1.0, maxval=500.0),
+        epoch_start=jax.random.uniform(ks[9], (n,)) * 0.01,
+        rate_cur=jax.random.uniform(ks[10], (n,), minval=1e6, maxval=6e9),
+        rate_target=jax.random.uniform(ks[11], (n,), minval=1e6, maxval=6e9),
+        alpha=jax.random.uniform(ks[0], (n,)),
+        t_last_cnp=jax.random.uniform(ks[1], (n,)) * 0.01,
+        t_last_inc=jax.random.uniform(ks[2], (n,)) * 0.01,
+        t_last_alpha=jax.random.uniform(ks[3], (n,)) * 0.01,
+        inc_stage=jax.random.randint(ks[4], (n,), 0, 10),
+    )
+    return st._replace(det=det, cc=cc)
+
+
+PROTO_CASES = [
+    (Algo.RENO, Variant.WI, 1.75, 0.25),
+    (Algo.RENO, Variant.MD, 1.0, 1.0),
+    (Algo.RENO, Variant.OFF, 1.75, 0.25),
+    (Algo.CUBIC, Variant.WI, 1.0, 0.5),
+    (Algo.CUBIC, Variant.MD, 0.8, 0.8),
+    (Algo.DCQCN, Variant.WI, 1.067, 0.267),
+    (Algo.DCQCN, Variant.MD, 1.067, 0.267),
+    (Algo.DCQCN, Variant.BOTH, 1.067, 0.267),
+]
+
+
+@pytest.mark.parametrize("case", PROTO_CASES)
+@pytest.mark.parametrize("n", [7, 64, 300])
+def test_mltcp_tick_kernel_matches_core(case, n):
+    algo, variant, slope, intercept = case
+    cfg = MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant)),
+                      slope=slope, intercept=intercept)
+    key = jax.random.PRNGKey(n)
+    st = _random_protocol_state(n, cfg, key)
+    ks = jax.random.split(key, 4)
+    fb = Feedback(
+        num_acks=jnp.where(jax.random.uniform(ks[0], (n,)) < 0.7,
+                           jax.random.uniform(ks[1], (n,)) * 40.0, 0.0),
+        loss=jax.random.uniform(ks[2], (n,)) < 0.2,
+        cnp=jax.random.uniform(ks[3], (n,)) < 0.3,
+        now=jnp.asarray(0.0123),
+    )
+    total = jnp.full((n,), 1e8)
+    f2j = jnp.arange(n) % 3
+
+    want_st, want_rate = cc_tick(cfg, st, fb, total, flow_to_job=f2j,
+                                 n_jobs=3)
+    got_st, got_rate = ops.mltcp_cc_tick(cfg, st, fb, total, flow_to_job=f2j,
+                                         n_jobs=3)
+    np.testing.assert_allclose(np.asarray(got_rate), np.asarray(want_rate),
+                               rtol=1e-6)
+    for name in want_st.cc._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got_st.cc, name)),
+            np.asarray(getattr(want_st.cc, name)), rtol=1e-6,
+            err_msg=f"cc.{name}")
+    for name in want_st.det._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got_st.det, name)),
+            np.asarray(getattr(want_st.det, name)), rtol=1e-6,
+            err_msg=f"det.{name}")

@@ -1,0 +1,145 @@
+"""Netsim engine invariants + the paper's headline system behaviours."""
+import numpy as np
+import pytest
+
+from repro import netsim, workload
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+DT = 2e-5
+
+
+def _proto(algo=Algo.RENO, variant=Variant.WI, **kw):
+    defaults = {(int(Algo.RENO), int(Variant.WI)): (1.75, 0.25),
+                (int(Algo.DCQCN), int(Variant.WI)): (1.067, 0.267)}
+    s, i = defaults.get((int(algo), int(variant)), (1.75, 0.25))
+    return MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant),
+                                   tick_dt=DT, rtt=100e-6),
+                       slope=s, intercept=i, **kw)
+
+
+def _run(topo, jobs, proto, sim_time=2.0, **kw):
+    cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
+                           sim_time=sim_time, dt=DT, seed=3, **kw)
+    return cfg, netsim.postprocess(cfg, netsim.simulate(cfg))
+
+
+def test_single_job_achieves_near_line_rate_iterations():
+    """One job alone: iteration time ~ compute + comm/line_rate."""
+    topo = netsim.dumbbell(1, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.01], [25e6])
+    _, res = _run(topo, jobs, _proto())
+    ideal = 0.01 + 25e6 / 6.25e9
+    assert res.avg_iter(0) < ideal * 1.6, (res.avg_iter(0), ideal)
+    assert len(res.iter_times[0]) > 50
+
+
+def test_throughput_never_exceeds_capacity():
+    topo = netsim.dumbbell(3, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.005] * 3, [20e6] * 3)
+    cfg, res = _run(topo, jobs, _proto())
+    assert np.all(res.trace_util <= 1.0 + 1e-5)
+
+
+def test_bytes_conservation():
+    """Every completed iteration delivered exactly its job's bytes."""
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.008, 0.008], [15e6, 15e6])
+    cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=_proto(),
+                           sim_time=2.0, dt=DT, seed=0)
+    raw = netsim.simulate(cfg)
+    res = netsim.postprocess(cfg, raw)
+    total_delivered = float(np.asarray(raw.trace_jobtput).sum()) \
+        * (cfg.sim_time / raw.trace_jobtput.shape[0])
+    iters_done = sum(len(x) for x in res.iter_times)
+    # delivered >= completed iterations' bytes (plus in-flight partials)
+    assert total_delivered >= iters_done * 15e6 * 0.95
+    assert total_delivered <= (iters_done + 2) * 15e6 * 1.10
+
+
+def test_mltcp_interleaves_and_speeds_up_reno():
+    """Headline claim: MLTCP-Reno interleaves two jobs and beats Reno."""
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.0075, 0.0075], [25e6, 25e6])
+    _, base = _run(topo, jobs, _proto(variant=Variant.OFF), sim_time=3.0)
+    _, ml = _run(topo, jobs, _proto(variant=Variant.WI), sim_time=3.0)
+    assert netsim.mean_pairwise_interleave(ml) < 0.35
+    assert netsim.mean_pairwise_interleave(ml) \
+        < netsim.mean_pairwise_interleave(base)
+    sp = netsim.speedup_stats(base, ml)
+    assert sp["avg_speedup"] > 1.02, sp
+
+
+def test_decreasing_f_does_not_interleave():
+    """SRPT-canceling aggressiveness (F5) must fail (paper Fig 15)."""
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.0075, 0.0075], [25e6, 25e6])
+    _, f1 = _run(topo, jobs, _proto(f_spec="F1"), sim_time=3.0)
+    _, f5 = _run(topo, jobs, _proto(f_spec="F5"), sim_time=3.0)
+    assert netsim.mean_pairwise_interleave(f1) < \
+        netsim.mean_pairwise_interleave(f5) - 0.1
+
+
+def test_scale_invariance():
+    """Scaling all durations/bytes together preserves relative speedups
+    (justifies the benchmarks' WORK_SCALE)."""
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+
+    def speedup(scale, sim_time):
+        jobs = netsim.JobSpec.simple([0.01 * scale] * 2, [30e6 * scale] * 2)
+        _, base = _run(topo, jobs, _proto(variant=Variant.OFF),
+                       sim_time=sim_time)
+        _, ml = _run(topo, jobs, _proto(variant=Variant.WI),
+                     sim_time=sim_time)
+        return netsim.speedup_stats(base, ml)["avg_speedup"]
+
+    s1 = speedup(1.0, 4.0)
+    s2 = speedup(2.0, 8.0)
+    assert abs(s1 - s2) < 0.25, (s1, s2)
+
+
+def test_straggler_injection_slows_iterations():
+    topo = netsim.dumbbell(1, sockets_per_job=1)
+    jobs_clean = netsim.JobSpec.simple([0.01], [10e6])
+    jobs_strag = netsim.JobSpec.simple([0.01], [10e6],
+                                       straggle_prob=[0.5])
+    _, clean = _run(topo, jobs_clean, _proto())
+    _, strag = _run(topo, jobs_strag, _proto())
+    assert strag.avg_iter(0) > clean.avg_iter(0) * 1.01
+
+
+def test_multi_peak_phase_program():
+    """Hybrid jobs (multiple comm peaks per iteration) complete correctly."""
+    topo = netsim.dumbbell(1, sockets_per_job=1)
+    prof = workload.profile_for("gpt3_hybrid").scaled(0.2)
+    jobs = workload.jobspec_from_profiles([prof])
+    _, res = _run(topo, jobs, _proto())
+    assert len(res.iter_times[0]) > 5
+    iso = prof.iso_iter_time()
+    assert res.avg_iter(0) >= iso * 0.9
+
+
+def test_cassini_baseline_interleaves_compatible_jobs():
+    topo = netsim.dumbbell(2, sockets_per_job=2)
+    prof = workload.CommProfile("j", (0.0075,), (25e6,))
+    sched, feasible = workload.cassini_schedule(topo, [prof, prof])
+    assert feasible
+    jobs = workload.jobspec_from_profiles([prof, prof])
+    _, base = _run(topo, jobs, _proto(algo=Algo.DCQCN, variant=Variant.OFF),
+                   sim_time=3.0)
+    _, cas = _run(topo, jobs, _proto(algo=Algo.DCQCN, variant=Variant.OFF),
+                  sim_time=3.0, cassini=sched)
+    assert netsim.mean_pairwise_interleave(cas) <= \
+        netsim.mean_pairwise_interleave(base) + 0.05
+
+
+def test_engine_with_pallas_kernel_matches_jnp():
+    """The fused-kernel engine path produces the same macro behaviour."""
+    topo = netsim.dumbbell(2, sockets_per_job=1)
+    jobs = netsim.JobSpec.simple([0.005, 0.005], [8e6, 8e6])
+    _, a = _run(topo, jobs, _proto(), sim_time=1.0)
+    cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=_proto(),
+                           sim_time=1.0, dt=DT, seed=3,
+                           use_pallas_kernel=True)
+    b = netsim.postprocess(cfg, netsim.simulate(cfg))
+    assert abs(a.avg_iter(0) - b.avg_iter(0)) / a.avg_iter(0) < 1e-3
+    assert len(a.iter_times[0]) == len(b.iter_times[0])
