@@ -18,9 +18,12 @@ from repro import netsim, workload
 from repro.core import Algo, CCParams, MLTCPConfig, Variant
 
 FULL = bool(int(os.environ.get("REPRO_FULL", "0")))
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))  # CI regression smoke
 WORK_SCALE = 1.0 if FULL else 0.25
-SIM_TIME = 20.0 if FULL else 4.0
+SIM_TIME = 20.0 if FULL else (1.5 if SMOKE else 4.0)
 DT = 2e-5
+# seed grid for error bars — a free vmap axis via netsim.simulate_sweep
+SEEDS = (1, 2, 3) if FULL else ((1,) if SMOKE else (1, 2))
 
 # paper §4.1 defaults per scheme
 PARAMS = {
@@ -56,22 +59,54 @@ def protocol(algo: str, variant: str = "WI", slope=None, intercept=None,
         **cfg_kw)
 
 
-def sim(topo, profiles, proto, *, sim_time=None, seed=1, straggle_prob=None,
-        start_offset=None, cassini=None, static_job_factors=None,
-        scale=None, **kw) -> netsim.SimResult:
+def build_cfg(topo, profiles, proto, *, sim_time=None, seed=1,
+              straggle_prob=None, start_offset=None, cassini=None,
+              static_job_factors=None, scale=None, **kw) -> netsim.SimConfig:
     scale = WORK_SCALE if scale is None else scale
     profiles = [p.scaled(scale) for p in profiles]
     jobs = workload.jobspec_from_profiles(profiles,
                                           straggle_prob=straggle_prob,
                                           start_offset=start_offset)
     algo = {int(v): k for k, v in ALGOS.items()}[proto.cc.algo]
-    cfg = netsim.SimConfig(
+    return netsim.SimConfig(
         topo=topo, jobs=jobs, protocol=proto,
         sim_time=SIM_TIME if sim_time is None else sim_time, dt=DT,
         seed=seed, cassini=cassini, static_job_factors=static_job_factors,
         **{**RED_BY_ALGO[algo], **kw})
+
+
+def sim(topo, profiles, proto, **kw) -> netsim.SimResult:
+    cfg = build_cfg(topo, profiles, proto, **kw)
     raw = netsim.simulate(cfg)
     return netsim.postprocess(cfg, raw)
+
+
+def sim_sweep(topo, profiles, proto, sweep_axes: dict,
+              **kw) -> list[netsim.SimResult]:
+    """Run a batched sweep (one compile) and return per-point SimResults.
+
+    ``sweep_axes`` maps SweepParams field names to value lists (paired
+    per-index, not a cartesian product — use `sim_grid` for grids).
+    """
+    cfg = build_cfg(topo, profiles, proto, **kw)
+    sweep = netsim.make_sweep(cfg, **sweep_axes)
+    raw = netsim.simulate_sweep(cfg, sweep)
+    return netsim.postprocess_sweep(cfg, raw)
+
+
+def sim_grid(topo, profiles, proto, grid_axes: dict,
+             **kw) -> tuple[list[netsim.SimResult], list[dict]]:
+    """Cartesian-product sweep (one compile); returns (results, grid points)."""
+    cfg = build_cfg(topo, profiles, proto, **kw)
+    sweep, points = netsim.grid_sweep(cfg, **grid_axes)
+    raw = netsim.simulate_sweep(cfg, sweep)
+    return netsim.postprocess_sweep(cfg, raw), points
+
+
+def sim_seeds(topo, profiles, proto, seeds=None, **kw) -> list[netsim.SimResult]:
+    """Multi-seed runs of one scenario as a single batched sweep."""
+    return sim_sweep(topo, profiles, proto,
+                     {"seed": list(SEEDS if seeds is None else seeds)}, **kw)
 
 
 @dataclasses.dataclass

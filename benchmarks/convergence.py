@@ -3,7 +3,9 @@
 Two GPT-2 data-parallel jobs share the dumbbell; compare default Reno /
 CUBIC / DCQCN against their MLTCP variants on: interleave convergence
 (iterations until the comm phases separate), drop/ECN-mark rate, and avg /
-p99 training-iteration times.
+p99 training-iteration times.  Every scheme runs its multi-seed grid as one
+batched `simulate_sweep`, so the reported metrics are seed-averaged with
+error bars for free.
 """
 from __future__ import annotations
 
@@ -27,22 +29,31 @@ def _converged_iteration(res: netsim.SimResult) -> float:
     return float(len(ok))
 
 
+def _ratio(nums, dens) -> float:
+    nums, dens = float(np.mean(nums)), float(np.mean(dens))
+    return nums / dens if dens > 0 else float("inf")
+
+
 def run_one(algo: str, sockets: int = 2) -> dict:
     topo = netsim.dumbbell(2, sockets_per_job=sockets)
     profs = common.gpt2(2)
-    base = common.sim(topo, profs, common.protocol(algo, "OFF"))
-    ml = common.sim(topo, profs, common.protocol(algo, "WI"))
-    sp = netsim.speedup_stats(base, ml)
+    base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
+    ml = common.sim_seeds(topo, profs, common.protocol(algo, "WI"))
+    sp = netsim.sweep_speedup_stats(base, ml)
     return {
         "algo": algo,
-        "baseline_interleave": netsim.mean_pairwise_interleave(base),
-        "mltcp_interleave": netsim.mean_pairwise_interleave(ml),
-        "converged_at_iter": _converged_iteration(ml),
-        "drop_reduction": (base.drops_per_s / ml.drops_per_s
-                           if ml.drops_per_s > 0 else float("inf")),
-        "mark_reduction": (base.marks_per_s / ml.marks_per_s
-                           if ml.marks_per_s > 0 else float("inf")),
+        "baseline_interleave": float(np.mean(
+            [netsim.mean_pairwise_interleave(r) for r in base])),
+        "mltcp_interleave": float(np.mean(
+            [netsim.mean_pairwise_interleave(r) for r in ml])),
+        "converged_at_iter": float(np.nanmean(
+            [_converged_iteration(r) for r in ml])),
+        "drop_reduction": _ratio([r.drops_per_s for r in base],
+                                 [r.drops_per_s for r in ml]),
+        "mark_reduction": _ratio([r.marks_per_s for r in base],
+                                 [r.marks_per_s for r in ml]),
         "avg_speedup": sp["avg_speedup"],
+        "avg_speedup_std": sp["avg_speedup_std"],
         "p99_speedup": sp["p99_speedup"],
     }
 
@@ -51,7 +62,8 @@ def run(algos=("reno", "cubic", "dcqcn")) -> tuple[dict, int]:
     out = {}
     for algo in algos:
         out[algo] = run_one(algo)
-    n_ticks = int(common.SIM_TIME / common.DT) * 2 * len(algos)
+    n_ticks = int(common.SIM_TIME / common.DT) * 2 * len(algos) \
+        * len(common.SEEDS)
     return out, n_ticks
 
 

@@ -2,8 +2,14 @@
 
   fig15: aggressiveness functions F1..F4 (increasing) interleave and speed
          up; F5, F6 (decreasing) do not — the SRPT-reinforcement claim.
-  fig16: S x I sweep heatmap of MLTCP-Reno speedups.
+  fig16: S x I sweep heatmap of MLTCP-Reno speedups — the whole grid runs
+         as ONE `netsim.simulate_sweep` call (one trace, one compile).
   fig17: WI vs MD variants perform similarly (Reno and CUBIC).
+
+fig15/fig17 vary *static* protocol structure (F family, variant) so each
+scheme compiles once, but every scheme runs a batched multi-seed sweep for
+error bars; fig16 varies only traced scalars, so the full heatmap shares a
+single compiled program with the seed axis folded into the same batch.
 """
 from __future__ import annotations
 
@@ -17,40 +23,47 @@ def fig15_agg_functions(fns=("F1", "F2", "F3", "F4", "F5", "F6")
                         ) -> tuple[dict, int]:
     topo = netsim.dumbbell(3, sockets_per_job=2)
     profs = common.gpt2(3)
-    base = common.sim(topo, profs, common.protocol("reno", "OFF"))
+    base = common.sim_seeds(topo, profs, common.protocol("reno", "OFF"))
     out = {}
     for f in fns:
-        res = common.sim(topo, profs, common.protocol("reno", "WI",
-                                                      f_spec=f))
-        sp = netsim.speedup_stats(base, res)
+        res = common.sim_seeds(topo, profs,
+                               common.protocol("reno", "WI", f_spec=f))
+        sp = netsim.sweep_speedup_stats(base, res)
+        inter = [netsim.mean_pairwise_interleave(r) for r in res]
         out[f] = {
             "avg_speedup": round(sp["avg_speedup"], 3),
-            "interleave": round(netsim.mean_pairwise_interleave(res), 3),
+            "avg_speedup_std": round(sp["avg_speedup_std"], 3),
+            "interleave": round(float(np.mean(inter)), 3),
         }
-    return out, int(common.SIM_TIME / common.DT) * (len(fns) + 1)
+    n_sims = len(common.SEEDS) * (len(fns) + 1)
+    return out, int(common.SIM_TIME / common.DT) * n_sims
 
 
 def fig16_heatmap(slopes=(0.5, 1.0, 1.75, 2.5),
                   intercepts=(0.1, 0.25, 0.5, 1.0)) -> tuple[dict, int]:
     topo = netsim.dumbbell(2, sockets_per_job=2)
     profs = common.gpt2(2)
-    base = common.sim(topo, profs, common.protocol("reno", "OFF"))
+    seeds = list(common.SEEDS)
+    base = common.sim_seeds(topo, profs, common.protocol("reno", "OFF"))
+    # one batched program: K = |S| * |I| * |seeds| grid points
+    results, points = common.sim_grid(
+        topo, profs, common.protocol("reno", "WI"),
+        {"slope": slopes, "intercept": intercepts, "seed": seeds})
     grid = {}
-    n = 1
-    for s in slopes:
-        for i in intercepts:
-            res = common.sim(topo, profs,
-                             common.protocol("reno", "WI", slope=s,
-                                             intercept=i))
-            sp = netsim.speedup_stats(base, res)
-            grid[f"S={s},I={i}"] = {
-                "avg_speedup": round(sp["avg_speedup"], 3),
-                "p99_speedup": round(sp["p99_speedup"], 3),
-            }
-            n += 1
+    for (s, i) in [(s, i) for s in slopes for i in intercepts]:
+        idx = [k for k, p in enumerate(points)
+               if p["slope"] == s and p["intercept"] == i]
+        # pair each seed's MLTCP run with the same seed's baseline
+        sp = netsim.sweep_speedup_stats(base, [results[k] for k in idx])
+        grid[f"S={s},I={i}"] = {
+            "avg_speedup": round(sp["avg_speedup"], 3),
+            "p99_speedup": round(sp["p99_speedup"], 3),
+            "avg_speedup_std": round(sp["avg_speedup_std"], 3),
+        }
     best = max(grid, key=lambda k: grid[k]["avg_speedup"])
     grid["best"] = {"at": best, **grid[best]}
-    return grid, int(common.SIM_TIME / common.DT) * n
+    n_sims = len(points) + len(seeds)
+    return grid, int(common.SIM_TIME / common.DT) * n_sims
 
 
 def fig17_wi_vs_md() -> tuple[dict, int]:
@@ -59,16 +72,18 @@ def fig17_wi_vs_md() -> tuple[dict, int]:
     out = {}
     n = 0
     for algo in ("reno", "cubic"):
-        base = common.sim(topo, profs, common.protocol(algo, "OFF"))
+        base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
         for variant in ("WI", "MD"):
-            res = common.sim(topo, profs, common.protocol(algo, variant))
-            sp = netsim.speedup_stats(base, res)
+            res = common.sim_seeds(topo, profs,
+                                   common.protocol(algo, variant))
+            sp = netsim.sweep_speedup_stats(base, res)
             out[f"{algo}-{variant}"] = {
                 "avg_speedup": round(sp["avg_speedup"], 3),
                 "p99_speedup": round(sp["p99_speedup"], 3),
+                "avg_speedup_std": round(sp["avg_speedup_std"], 3),
             }
-            n += 1
-        n += 1
+            n += len(common.SEEDS)
+        n += len(common.SEEDS)
     return out, int(common.SIM_TIME / common.DT) * n
 
 

@@ -2,6 +2,10 @@
 
 The paper: MLTCP-Reno plateaus ~1.3x avg / 1.5x p99; MLQCN reaches 2x / 4x
 as DCQCN's congestion collapse (pause storms) worsens with more jobs.
+
+Each (algo, n_jobs) cell changes the topology (static), so it compiles its
+own program — but baseline and MLTCP both run their whole multi-seed grid
+as one batched `simulate_sweep`, and the reported numbers carry error bars.
 """
 from __future__ import annotations
 
@@ -16,14 +20,15 @@ def run(algos=("reno", "dcqcn"), job_counts=(2, 3, 4, 5, 6)) -> tuple[dict, int]
         for n in job_counts:
             topo = netsim.dumbbell(n, sockets_per_job=2)
             profs = common.gpt2(n)
-            base = common.sim(topo, profs, common.protocol(algo, "OFF"))
-            ml = common.sim(topo, profs, common.protocol(algo, "WI"))
-            sp = netsim.speedup_stats(base, ml)
+            base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
+            ml = common.sim_seeds(topo, profs, common.protocol(algo, "WI"))
+            sp = netsim.sweep_speedup_stats(base, ml)
             out[f"{algo}_{n}jobs"] = {
                 "avg_speedup": round(sp["avg_speedup"], 3),
                 "p99_speedup": round(sp["p99_speedup"], 3),
+                "avg_speedup_std": round(sp["avg_speedup_std"], 3),
             }
-            total_sims += 2
+            total_sims += 2 * len(common.SEEDS)
     return out, int(common.SIM_TIME / common.DT) * total_sims
 
 

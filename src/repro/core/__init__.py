@@ -10,12 +10,14 @@ from repro.core.aggressiveness import linear, make_fn, paper_functions
 from repro.core.iteration import (
     IterDetectParams,
     IterDetectState,
+    boundary_mask,
     run_on_trace,
     update_mltcp_params,
 )
 from repro.core.mltcp import (
     Algo,
     CCParams,
+    DynamicParams,
     Feedback,
     FlowCCState,
     MLTCPConfig,
@@ -29,7 +31,9 @@ from repro.core.mltcp import (
 
 __all__ = [
     "linear", "make_fn", "paper_functions",
-    "IterDetectParams", "IterDetectState", "run_on_trace", "update_mltcp_params",
-    "Algo", "CCParams", "Feedback", "FlowCCState", "MLTCPConfig", "MLTCPState",
+    "IterDetectParams", "IterDetectState", "boundary_mask", "run_on_trace",
+    "update_mltcp_params",
+    "Algo", "CCParams", "DynamicParams", "Feedback", "FlowCCState",
+    "MLTCPConfig", "MLTCPState",
     "Variant", "cc_tick", "init_flow_state", "init_state", "send_rate",
 ]

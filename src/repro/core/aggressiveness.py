@@ -87,7 +87,9 @@ def make_fn(spec: str | AggressivenessFn, slope: float | None = None,
     """Resolve an aggressiveness function.
 
     ``spec`` may be a callable (used as-is), one of "F1".."F6", or "linear"
-    (requires slope/intercept).
+    (requires slope/intercept).  slope/intercept may be python floats *or*
+    traced JAX scalars — the latter lets a vmapped parameter sweep vary
+    Eq. 3 without retracing (DESIGN.md §3).
     """
     if callable(spec):
         return spec

@@ -66,6 +66,20 @@ def init_state(n_flows: int, params: IterDetectParams,
     )
 
 
+def boundary_mask(prev_ack_tstamp: Array, iter_gap: Array, g,
+                  num_acks: Array, now: Array) -> Array:
+    """Algorithm 1 line 16: does this ack open a new training iteration?
+
+    The single source of truth for the boundary predicate — used by
+    ``update_mltcp_params`` below and by the fused-kernel wrapper
+    (`repro.kernels.ops.mltcp_cc_tick`) to maintain the ``n_boundaries``
+    metrics counter, so the two paths cannot drift.
+    """
+    has_ack = num_acks > 0
+    curr_gap = now - prev_ack_tstamp
+    return has_ack & (curr_gap > g * iter_gap)
+
+
 def update_mltcp_params(state: IterDetectState, params: IterDetectParams,
                         num_acks: Array, now: Array,
                         job_bytes_sent: Array | None = None) -> IterDetectState:
@@ -85,29 +99,26 @@ def update_mltcp_params(state: IterDetectState, params: IterDetectParams,
     curr_gap = now - state.prev_ack_tstamp                         # line 14
     max_gap = jnp.maximum(state.max_gap, curr_gap)                 # line 15
 
-    new_iter = curr_gap > params.g * state.iter_gap                # line 16
+    boundary = boundary_mask(state.prev_ack_tstamp, state.iter_gap,
+                             params.g, num_acks, now)              # line 16
     # line 19: iter_gap EWMA folds in this iteration's max observed gap
     iter_gap_upd = (1.0 - params.gamma) * state.iter_gap + params.gamma * max_gap
 
     numer = job_bytes_sent if job_bytes_sent is not None else bytes_sent
     ratio_mid = jnp.minimum(1.0, numer / jnp.maximum(params.total_bytes, 1.0))
 
-    def sel(boundary_val, mid_val):
-        return jnp.where(has_ack & new_iter, boundary_val,
-                         jnp.where(has_ack, mid_val, 0.0))
-
     return IterDetectState(
         # lines 21-22 (reset) vs line 12 (accumulate)
-        bytes_sent=jnp.where(has_ack & new_iter, 0.0,
+        bytes_sent=jnp.where(boundary, 0.0,
                              jnp.where(has_ack, bytes_sent, state.bytes_sent)),
-        bytes_ratio=jnp.where(has_ack & new_iter, 0.0,
+        bytes_ratio=jnp.where(boundary, 0.0,
                               jnp.where(has_ack, ratio_mid, state.bytes_ratio)),
         prev_ack_tstamp=jnp.where(has_ack, now, state.prev_ack_tstamp),  # line 26
-        iter_gap=jnp.where(has_ack & new_iter, iter_gap_upd, state.iter_gap),
-        max_gap=jnp.where(has_ack & new_iter,
+        iter_gap=jnp.where(boundary, iter_gap_upd, state.iter_gap),
+        max_gap=jnp.where(boundary,
                           jnp.broadcast_to(params.init_comm_gap, max_gap.shape),
                           jnp.where(has_ack, max_gap, state.max_gap)),
-        n_boundaries=state.n_boundaries + (has_ack & new_iter).astype(jnp.int32),
+        n_boundaries=state.n_boundaries + boundary.astype(jnp.int32),
     )
 
 

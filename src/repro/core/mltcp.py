@@ -39,9 +39,38 @@ Array = jnp.ndarray
 
 __all__ = [
     "Algo", "Variant", "CCParams", "FlowCCState", "Feedback",
-    "MLTCPConfig", "MLTCPState", "init_state", "cc_tick",
+    "MLTCPConfig", "MLTCPState", "DynamicParams", "init_state", "cc_tick",
     "init_flow_state", "send_rate",
 ]
+
+
+class DynamicParams(NamedTuple):
+    """Traced protocol scalars — the dynamic half of the static/dynamic
+    config split (DESIGN.md §3).
+
+    ``MLTCPConfig`` holds everything that shapes the computation graph
+    (algorithm, variant, favoritism policy, F family) and is a static jit
+    argument; ``DynamicParams`` carries the *values* a parameter sweep
+    varies, as JAX scalars that can be vmapped over a sweep axis without
+    retracing.  ``from_config`` lifts a config's scalars; ``cc_tick`` uses
+    a ``DynamicParams`` in preference to the config's baked-in floats.
+    """
+
+    slope: Array
+    intercept: Array
+    g: Array
+    gamma: Array
+    init_comm_gap: Array
+
+    @staticmethod
+    def from_config(cfg: "MLTCPConfig") -> "DynamicParams":
+        return DynamicParams(
+            slope=jnp.asarray(cfg.slope, jnp.float32),
+            intercept=jnp.asarray(cfg.intercept, jnp.float32),
+            g=jnp.asarray(cfg.g, jnp.float32),
+            gamma=jnp.asarray(cfg.gamma, jnp.float32),
+            init_comm_gap=jnp.asarray(cfg.init_comm_gap, jnp.float32),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,10 +97,14 @@ class MLTCPState(NamedTuple):
     det: iteration.IterDetectState
 
 
-def init_state(n_flows: int, cfg: MLTCPConfig) -> MLTCPState:
+def init_state(n_flows: int, cfg: MLTCPConfig,
+               dyn: Optional[DynamicParams] = None) -> MLTCPState:
+    """Fresh protocol state; ``dyn`` overrides the config's traced scalars
+    (the iter_gap estimate seeds from INIT_COMM_GAP)."""
+    init_gap = cfg.init_comm_gap if dyn is None else dyn.init_comm_gap
     det_params = iteration.IterDetectParams(
         total_bytes=jnp.ones((n_flows,)),  # engine overwrites via params arg
-        init_comm_gap=jnp.asarray(cfg.init_comm_gap),
+        init_comm_gap=jnp.asarray(init_gap),
         g=cfg.g, gamma=cfg.gamma, mtu=cfg.cc.mss,
     )
     return MLTCPState(cc=init_flow_state(n_flows, cfg.cc),
@@ -106,7 +139,8 @@ def cc_tick(cfg: MLTCPConfig,
             n_jobs: int = 0,
             static_factors: Optional[Array] = None,
             comm_elapsed: Optional[Array] = None,
-            est_finish: Optional[Array] = None) -> tuple[MLTCPState, Array]:
+            est_finish: Optional[Array] = None,
+            dyn: Optional[DynamicParams] = None) -> tuple[MLTCPState, Array]:
     """One protocol tick for all flows.
 
     Args:
@@ -115,13 +149,17 @@ def cc_tick(cfg: MLTCPConfig,
       flow_to_job / n_jobs: socket→job map for per-job statistics aggregation.
       static_factors: if given, the Static [67] baseline — per-flow constant
         replaces F(bytes_ratio).
+      dyn: traced protocol scalars (slope/intercept/g/gamma/init_comm_gap)
+        replacing the config's static floats — the sweep-axis hook.
     Returns:
       (new_state, send_rate_bytes_per_s)
     """
+    if dyn is None:
+        dyn = DynamicParams.from_config(cfg)
     det_params = iteration.IterDetectParams(
         total_bytes=total_bytes,
-        init_comm_gap=jnp.asarray(cfg.init_comm_gap),
-        g=cfg.g, gamma=cfg.gamma, mtu=cfg.cc.mss,
+        init_comm_gap=jnp.asarray(dyn.init_comm_gap),
+        g=dyn.g, gamma=dyn.gamma, mtu=cfg.cc.mss,
     )
 
     # --- Algorithm 1: update bytes_sent / bytes_ratio / boundary detection ---
@@ -141,7 +179,8 @@ def cc_tick(cfg: MLTCPConfig,
         f_vals = jnp.ones_like(det.bytes_ratio)
     else:
         score = _favoritism_score(cfg, det, fb, comm_elapsed, est_finish)
-        f_vals = cfg.f()(score)
+        fn = aggressiveness.make_fn(cfg.f_spec, dyn.slope, dyn.intercept)
+        f_vals = fn(score)
 
     f_wi, f_md = reno.split_f(cfg.cc, f_vals)
 

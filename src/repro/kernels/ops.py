@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import iteration
 from repro.core import mltcp as core
 from repro.kernels import flash_attention as fa
 from repro.kernels import mltcp_step as ms
@@ -129,23 +130,42 @@ def _pack(x, n_pad, fill=0.0, dtype=jnp.float32):
     return x.reshape(n_pad // ms.LANES, ms.LANES)
 
 
+def _is_concrete(x) -> bool:
+    """True iff ``x`` can be baked into the kernel's static closure."""
+    return not isinstance(x, jax.core.Tracer)
+
+
 def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
                   fb: core.Feedback, total_bytes: Array,
                   flow_to_job: Optional[Array] = None, n_jobs: int = 0,
                   static_factors: Optional[Array] = None,
                   comm_elapsed: Optional[Array] = None,
-                  est_finish: Optional[Array] = None
+                  est_finish: Optional[Array] = None,
+                  dyn: Optional[core.DynamicParams] = None
                   ) -> tuple[core.MLTCPState, Array]:
-    """core.cc_tick drop-in backed by the fused Pallas kernel."""
+    """core.cc_tick drop-in backed by the fused Pallas kernel.
+
+    The kernel specializes on concrete protocol scalars; a traced
+    ``DynamicParams`` (the sweep axis) cannot be closed over by the Pallas
+    body, so sweeps transparently route through the jnp oracle instead.
+    """
     kernel_ok = (static_factors is None
                  and cfg.favoritism == "largest_data_sent"
-                 and cfg.f_spec == "linear")
+                 and cfg.f_spec == "linear"
+                 and (dyn is None or all(_is_concrete(v) for v in dyn)))
     if not kernel_ok:
         return core.cc_tick(cfg, state, fb, total_bytes,
                             flow_to_job=flow_to_job, n_jobs=n_jobs,
                             static_factors=static_factors,
                             comm_elapsed=comm_elapsed,
-                            est_finish=est_finish)
+                            est_finish=est_finish, dyn=dyn)
+    if dyn is None:
+        slope, intercept = cfg.slope, cfg.intercept
+        g, gamma, init_comm_gap = cfg.g, cfg.gamma, cfg.init_comm_gap
+    else:
+        slope, intercept = float(dyn.slope), float(dyn.intercept)
+        g, gamma = float(dyn.g), float(dyn.gamma)
+        init_comm_gap = float(dyn.init_comm_gap)
 
     n = state.cc.cwnd.shape[0]
     n_pad = -(-n // _ROW) * _ROW
@@ -172,8 +192,8 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
         "dcqcn_g": cc.dcqcn_g, "alpha_timer": cc.alpha_timer,
         "inc_timer": cc.inc_timer, "cnp_interval": cc.cnp_interval,
         "fast_recovery_stages": cc.fast_recovery_stages,
-        "slope": cfg.slope, "intercept": cfg.intercept,
-        "g": cfg.g, "gamma": cfg.gamma, "init_comm_gap": cfg.init_comm_gap,
+        "slope": slope, "intercept": intercept,
+        "g": g, "gamma": gamma, "init_comm_gap": init_comm_gap,
         "aggregate": aggregate,
     }
 
@@ -209,9 +229,10 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
     def unpack(x, dtype=jnp.float32):
         return x.reshape(-1)[:n].astype(dtype)
 
-    # boundary counter (metrics-only) maintained outside the kernel
-    has_ack = fb.num_acks > 0
-    boundary = has_ack & ((fb.now - d.prev_ack_tstamp) > cfg.g * d.iter_gap)
+    # boundary counter (metrics-only) maintained outside the kernel, via the
+    # same predicate helper the jnp oracle uses (single source of truth)
+    boundary = iteration.boundary_mask(d.prev_ack_tstamp, d.iter_gap, g,
+                                       fb.num_acks, fb.now)
 
     det = core.MLTCPState(
         cc=state.cc, det=state.det).det._replace(

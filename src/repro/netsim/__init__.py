@@ -3,22 +3,40 @@
 The evaluation substrate replacing the paper's 12-server testbed: links with
 FIFO queues and RED/ECN, per-flow multi-hop routing, RTT-delayed feedback,
 and periodic DNN-job traffic — all stepped by a single `jax.lax.scan`.
+Parameter/seed sweeps batch over a leading vmap axis (`simulate_sweep`):
+one trace, one compile, K simulations per device program.
 """
 
 from repro.netsim.topology import Topology, dumbbell, triangle, two_tier
-from repro.netsim.engine import CassiniSchedule, JobSpec, SimConfig, simulate
+from repro.netsim.engine import (
+    CassiniSchedule,
+    JobSpec,
+    SimConfig,
+    SweepParams,
+    grid_sweep,
+    make_sweep,
+    simulate,
+    simulate_sweep,
+    sweep_len,
+    sweep_of,
+)
 from repro.netsim.metrics import (
     SimResult,
     interleave_score,
     iteration_times,
     mean_pairwise_interleave,
     postprocess,
+    postprocess_sweep,
     speedup_stats,
+    sweep_speedup_stats,
 )
 
 __all__ = [
     "Topology", "dumbbell", "triangle", "two_tier",
     "CassiniSchedule", "SimConfig", "JobSpec", "simulate",
+    "SweepParams", "simulate_sweep", "make_sweep", "grid_sweep",
+    "sweep_len", "sweep_of",
     "SimResult", "interleave_score", "iteration_times",
-    "mean_pairwise_interleave", "postprocess", "speedup_stats",
+    "mean_pairwise_interleave", "postprocess", "postprocess_sweep",
+    "speedup_stats", "sweep_speedup_stats",
 ]

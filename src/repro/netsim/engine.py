@@ -4,6 +4,14 @@ One `jax.lax.scan` steps the whole fabric: job phase machines, flow injection,
 store-and-forward link queues with RED/ECN, RTT-delayed ack/loss/CNP feedback,
 and the MLTCP-augmented congestion-control update (`repro.core.cc_tick`).
 
+Configuration is split (DESIGN.md §3): `SimConfig` is the *static* half —
+topology, jobs, algorithm/variant choices, everything that shapes the traced
+program — and `SweepParams` is the *dynamic* half: protocol scalars (slope,
+intercept, g, gamma, INIT_COMM_GAP), RED thresholds, the Static-baseline job
+factors and the PRNG seed, carried as traced values.  `simulate_sweep` vmaps
+the whole chunked scan over a leading sweep axis, so a K-point parameter /
+seed grid is one trace, one compile, and one device program instead of K.
+
 Model summary (hardware-adaptation notes in DESIGN.md §2):
   * fluid flows: each tick a flow injects ``min(rate*dt, bytes_left)``;
   * store-and-forward: bytes advance one link per tick; per-link service is
@@ -129,6 +137,118 @@ class SimConfig(HashableConfig):
 
 
 # ---------------------------------------------------------------------------
+# Sweep axis — the dynamic (traced) half of the configuration
+# ---------------------------------------------------------------------------
+
+class SweepParams(NamedTuple):
+    """Traced per-simulation parameters (one sweep grid point per entry).
+
+    Every field the paper's evaluation sweeps — the aggressiveness function's
+    slope/intercept (Fig. 16), Algorithm 1's g/gamma/INIT_COMM_GAP, the RED /
+    ECN thresholds, the Static [67] per-job factors and the PRNG seed — lives
+    here as a JAX value rather than a static jit argument, so
+    ``simulate_sweep`` can vmap one compiled program over a whole grid.
+
+    Unbatched (scalar) instances describe a single simulation; batched
+    instances carry a leading [K] axis on every non-None leaf.
+    """
+
+    slope: Array                # F(x) = slope * x + intercept      (Eq. 3)
+    intercept: Array
+    g: Array                    # Algorithm 1 noise tolerance
+    gamma: Array                # Algorithm 1 iter_gap EWMA factor
+    init_comm_gap: Array        # Algorithm 1 INIT_COMM_GAP (s)
+    red_qmin: Array             # RED ramp start (bytes)
+    red_qmax: Array             # RED ramp knee (bytes)
+    red_pmax: Array             # RED mark/drop probability at the knee
+    seed: Array                 # int32 PRNG seed
+    static_job_factors: Optional[Array]  # [J] Static-baseline factors or None
+
+    def dyn(self) -> core.DynamicParams:
+        """The protocol-layer slice, for `core.cc_tick`."""
+        return core.DynamicParams(slope=self.slope, intercept=self.intercept,
+                                  g=self.g, gamma=self.gamma,
+                                  init_comm_gap=self.init_comm_gap)
+
+
+def sweep_of(cfg: SimConfig) -> SweepParams:
+    """Lift a config's dynamic scalars into an (unbatched) SweepParams."""
+    sf = None
+    if cfg.static_job_factors is not None:
+        sf = jnp.asarray(np.asarray(cfg.static_job_factors), jnp.float32)
+    p = cfg.protocol
+    return SweepParams(
+        slope=jnp.asarray(p.slope, jnp.float32),
+        intercept=jnp.asarray(p.intercept, jnp.float32),
+        g=jnp.asarray(p.g, jnp.float32),
+        gamma=jnp.asarray(p.gamma, jnp.float32),
+        init_comm_gap=jnp.asarray(p.init_comm_gap, jnp.float32),
+        red_qmin=jnp.asarray(cfg.red_qmin, jnp.float32),
+        red_qmax=jnp.asarray(cfg.red_qmax, jnp.float32),
+        red_pmax=jnp.asarray(cfg.red_pmax, jnp.float32),
+        seed=jnp.asarray(cfg.seed, jnp.int32),
+        static_job_factors=sf,
+    )
+
+
+def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
+    """Build a batched SweepParams from a config plus per-field overrides.
+
+    Each override is a scalar (held constant) or a length-K sequence (the
+    sweep values); ``static_job_factors`` takes [J] or [K, J].  All length-K
+    overrides must agree on K; unswept fields are broadcast from the config.
+    """
+    base = sweep_of(cfg)
+    lens = []
+    for name, v in overrides.items():
+        if name not in SweepParams._fields:
+            raise ValueError(f"unknown sweep field {name!r}; "
+                             f"choose from {SweepParams._fields}")
+        point_ndim = 1 if name == "static_job_factors" else 0
+        a = np.asarray(v)
+        if a.ndim == point_ndim + 1:
+            lens.append(a.shape[0])
+        elif a.ndim != point_ndim:
+            raise ValueError(f"sweep field {name!r} has shape {a.shape}")
+    k = lens[0] if lens else 1
+    if any(l != k for l in lens):
+        raise ValueError(f"sweep fields disagree on length: {lens}")
+    out = {}
+    for name in SweepParams._fields:
+        v = overrides.get(name, getattr(base, name))
+        if v is None:
+            out[name] = None
+            continue
+        a = jnp.asarray(v, jnp.int32 if name == "seed" else jnp.float32)
+        point_ndim = 1 if name == "static_job_factors" else 0
+        if a.ndim == point_ndim:
+            a = jnp.broadcast_to(a[None], (k,) + a.shape)
+        out[name] = a
+    return SweepParams(**out)
+
+
+def grid_sweep(cfg: SimConfig, **axes) -> tuple[SweepParams, list[dict]]:
+    """Cartesian-product sweep over the given scalar axes.
+
+    Returns the batched SweepParams (K = product of axis lengths) plus, per
+    grid point, a dict of that point's axis values (for labeling results).
+    """
+    names = list(axes)
+    grids = np.meshgrid(*[np.asarray(axes[n], np.float64) for n in names],
+                        indexing="ij")
+    flat = {n: g.reshape(-1) for n, g in zip(names, grids)}
+    points = [{n: flat[n][i] for n in names}
+              for i in range(next(iter(flat.values())).shape[0])] \
+        if names else [{}]
+    return make_sweep(cfg, **flat), points
+
+
+def sweep_len(sweep: SweepParams) -> int:
+    """K, the number of grid points in a batched SweepParams."""
+    return int(sweep.slope.shape[0])
+
+
+# ---------------------------------------------------------------------------
 # Engine state
 # ---------------------------------------------------------------------------
 
@@ -176,7 +296,6 @@ class TickStatics(NamedTuple):
     iso_iter: Array       # [J]
     job_total_bytes: Array  # [J]
     period: Array         # [J]
-    static_factors: Optional[Array]
     cassini_offset: Optional[Array]
     cassini_period: Optional[Array]
 
@@ -195,9 +314,6 @@ def _build_statics(cfg: SimConfig) -> TickStatics:
     f2j = topo.flow_to_job.astype(np.int32)
     spj = np.bincount(f2j, minlength=jobs.n_jobs).astype(np.float64)
     period = jobs.compute.sum(1) + jobs.comm_bytes.sum(1) / topo.cap.min()
-    sf = None
-    if cfg.static_job_factors is not None:
-        sf = jnp.asarray(np.asarray(cfg.static_job_factors)[f2j], jnp.float32)
     return TickStatics(
         cap=jnp.asarray(topo.cap, jnp.float32),
         first_link=jnp.asarray(first_link),
@@ -212,7 +328,6 @@ def _build_statics(cfg: SimConfig) -> TickStatics:
         iso_iter=jnp.asarray(jobs.iso_iter_time, jnp.float32),
         job_total_bytes=jnp.asarray(jobs.total_bytes, jnp.float32),
         period=jnp.asarray(period, jnp.float32),
-        static_factors=sf,
         cassini_offset=(jnp.asarray(cfg.cassini.offset, jnp.float32)
                         if cfg.cassini is not None else None),
         cassini_period=(jnp.asarray(cfg.cassini.period, jnp.float32)
@@ -220,13 +335,14 @@ def _build_statics(cfg: SimConfig) -> TickStatics:
     )
 
 
-def _init_state(cfg: SimConfig, statics: TickStatics) -> EngineState:
+def _init_state(cfg: SimConfig, statics: TickStatics,
+                sweep: SweepParams) -> EngineState:
     topo, jobs = cfg.topo, cfg.jobs
     M, N, J = topo.n_links, topo.n_flows, jobs.n_jobs
     D = cfg.rtt_ticks
     z = jnp.zeros
     return EngineState(
-        proto=core.init_state(N, cfg.protocol),
+        proto=core.init_state(N, cfg.protocol, dyn=sweep.dyn()),
         backlog=z((M + 1, N), jnp.float32),
         transit=z((M + 1, N), jnp.float32),
         ring_del=z((D, N), jnp.float32),
@@ -244,7 +360,7 @@ def _init_state(cfg: SimConfig, statics: TickStatics) -> EngineState:
         hold_until=z((J,), jnp.float32),
         iter_times=jnp.full((J, cfg.max_iters_recorded), jnp.nan, jnp.float32),
         straggle_extra=z((J,), jnp.float32),
-        key=jax.random.PRNGKey(cfg.seed),
+        key=jax.random.PRNGKey(sweep.seed),
         tick=jnp.asarray(0, jnp.int32),
         acc_util=z((M,), jnp.float32),
         acc_drops=jnp.asarray(0.0, jnp.float32),
@@ -257,16 +373,18 @@ def _init_state(cfg: SimConfig, statics: TickStatics) -> EngineState:
 # One tick
 # ---------------------------------------------------------------------------
 
-def _red_prob(cfg: SimConfig, q: Array) -> Array:
+def _red_prob(sweep: SweepParams, q: Array) -> Array:
     """Gentle RED: 0 -> pmax on [qmin, qmax], pmax -> 1 on [qmax, 2*qmax]."""
-    ramp1 = jnp.clip((q - cfg.red_qmin) / (cfg.red_qmax - cfg.red_qmin),
-                     0.0, 1.0) * cfg.red_pmax
-    ramp2 = jnp.clip((q - cfg.red_qmax) / cfg.red_qmax, 0.0, 1.0) \
-        * (1.0 - cfg.red_pmax)
+    ramp1 = jnp.clip((q - sweep.red_qmin)
+                     / (sweep.red_qmax - sweep.red_qmin),
+                     0.0, 1.0) * sweep.red_pmax
+    ramp2 = jnp.clip((q - sweep.red_qmax) / sweep.red_qmax, 0.0, 1.0) \
+        * (1.0 - sweep.red_pmax)
     return ramp1 + ramp2
 
 
-def _tick(cfg: SimConfig, statics: TickStatics, st: EngineState,
+def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
+          dyn_from_cfg: bool, st: EngineState,
           _unused) -> tuple[EngineState, None]:
     dt = jnp.float32(cfg.dt)
     t = st.tick.astype(jnp.float32) * dt
@@ -326,7 +444,7 @@ def _tick(cfg: SimConfig, statics: TickStatics, st: EngineState,
     incoming = incoming.at[M].set(0.0)                           # trash row
 
     q_len = st.backlog[:M].sum(axis=1)                           # [M]
-    p_red = _red_prob(cfg, q_len)                                # [M]
+    p_red = _red_prob(sweep, q_len)                              # [M]
     p_full = jnp.concatenate([p_red, jnp.zeros((1,), p_red.dtype)])
     # taildrop on buffer overflow (both modes)
     overflow = jnp.concatenate([
@@ -432,14 +550,23 @@ def _tick(cfg: SimConfig, statics: TickStatics, st: EngineState,
                           / statics.period[statics.f2j], 0.0, 1.0)
 
     tick_fn = core.cc_tick
+    dyn = sweep.dyn()
     if cfg.use_pallas_kernel:
         from repro.kernels import ops as kernel_ops
         tick_fn = kernel_ops.mltcp_cc_tick
+        if dyn_from_cfg:
+            # the sweep values ARE the config's (K=1 `simulate` path), so let
+            # the fused kernel specialize on the concrete scalars; a real
+            # sweep keeps the traced dyn and ops.py routes to the jnp oracle
+            dyn = None
+    static_factors = (sweep.static_job_factors[statics.f2j]
+                      if sweep.static_job_factors is not None else None)
     proto, _ = tick_fn(
         cfg.protocol, st.proto, fb, flow_total,
         flow_to_job=statics.f2j, n_jobs=J,
-        static_factors=statics.static_factors,
-        comm_elapsed=comm_elapsed, est_finish=est_finish)
+        static_factors=static_factors,
+        comm_elapsed=comm_elapsed, est_finish=est_finish,
+        dyn=dyn)
 
     # CUBIC epoch reset on comm start (idle handling; see DESIGN.md)
     if (cfg.cubic_epoch_reset_on_comm_start
@@ -488,13 +615,13 @@ class RawSimOutput(NamedTuple):
     final_state: EngineState
 
 
-@partial(jax.jit, static_argnums=(0,))
-def _run(cfg: SimConfig, key: Array) -> RawSimOutput:
-    statics = _build_statics(cfg)
-    st = _init_state(cfg, statics)._replace(key=key)
+def _run_single(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
+                dyn_from_cfg: bool) -> RawSimOutput:
+    """One simulation as a pure traced function of an unbatched sweep point."""
+    st = _init_state(cfg, statics, sweep)
     ticks_per_chunk = max(1, cfg.n_ticks // cfg.n_chunks)
     n_chunks = cfg.n_ticks // ticks_per_chunk
-    tick = partial(_tick, cfg, statics)
+    tick = partial(_tick, cfg, statics, sweep, dyn_from_cfg)
 
     def chunk(st: EngineState, _):
         st = st._replace(acc_util=jnp.zeros_like(st.acc_util),
@@ -519,10 +646,58 @@ def _run(cfg: SimConfig, key: Array) -> RawSimOutput:
                         trace_ratio=rj, final_state=st)
 
 
-def simulate(cfg: SimConfig) -> RawSimOutput:
-    """Run one simulation (jitted; retraces per distinct static config)."""
+# Incremented once per (re)trace of the sweep program; tests pin "a K-point
+# sweep costs exactly one trace" on this counter.
+TRACE_COUNT = 0
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def _run_sweep(cfg: SimConfig, sweep: SweepParams,
+               dyn_from_cfg: bool) -> RawSimOutput:
+    """``dyn_from_cfg``: static promise that the sweep's protocol scalars
+    equal the config's (the K=1 `simulate` path), which lets the fused
+    Pallas kernel specialize on them instead of falling back (DESIGN.md §4).
+    """
+    global TRACE_COUNT
+    TRACE_COUNT += 1
+    statics = _build_statics(cfg)
+    return jax.vmap(lambda s: _run_single(cfg, statics, s,
+                                          dyn_from_cfg))(sweep)
+
+
+def _check_cfg(cfg: SimConfig) -> None:
     if abs(cfg.protocol.cc.tick_dt - cfg.dt) > 1e-12:
         raise ValueError(
             f"protocol.cc.tick_dt ({cfg.protocol.cc.tick_dt}) must equal the "
             f"simulator dt ({cfg.dt}); build CCParams with tick_dt=dt")
-    return _run(cfg, jax.random.PRNGKey(cfg.seed))
+
+
+def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
+    """Run K simulations batched over the sweep axis — one trace, one compile.
+
+    ``sweep`` is a batched SweepParams (see `make_sweep` / `grid_sweep`):
+    every non-None leaf carries a leading [K] axis.  The whole chunked
+    `lax.scan` is vmapped over that axis, so the returned RawSimOutput's
+    leaves all gain a leading [K] dimension (postprocess with
+    `metrics.postprocess_sweep`).  Retraces only when the *static* config
+    (topology, jobs, algorithm, K) changes — never per grid point.
+    """
+    _check_cfg(cfg)
+    if sweep.slope.ndim < 1:
+        raise ValueError("sweep is unbatched; every field needs a leading "
+                         "sweep axis (use make_sweep / grid_sweep)")
+    k = sweep_len(sweep)
+    for name in SweepParams._fields:
+        v = getattr(sweep, name)
+        if v is not None and (v.ndim < 1 or v.shape[0] != k):
+            raise ValueError(
+                f"sweep field {name!r} has shape {v.shape}; expected a "
+                f"leading sweep axis of length {k} (use make_sweep)")
+    return _run_sweep(cfg, sweep, False)
+
+
+def simulate(cfg: SimConfig) -> RawSimOutput:
+    """Run one simulation (a K=1 `simulate_sweep`, kept for compatibility)."""
+    _check_cfg(cfg)
+    raw = _run_sweep(cfg, make_sweep(cfg), True)
+    return jax.tree_util.tree_map(lambda x: x[0], raw)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.netsim.engine import RawSimOutput, SimConfig
@@ -65,6 +66,14 @@ def postprocess(cfg: SimConfig, raw: RawSimOutput) -> SimResult:
     )
 
 
+def postprocess_sweep(cfg: SimConfig, raw: RawSimOutput) -> list[SimResult]:
+    """Post-process a `simulate_sweep` output (leading [K] sweep axis) into
+    one SimResult per grid point, in sweep order."""
+    k = int(np.asarray(raw.iter_counts).shape[0])
+    return [postprocess(cfg, jax.tree_util.tree_map(lambda x, i=i: x[i], raw))
+            for i in range(k)]
+
+
 def iteration_times(cfg: SimConfig, raw: RawSimOutput) -> list[np.ndarray]:
     return postprocess(cfg, raw).iter_times
 
@@ -105,4 +114,21 @@ def speedup_stats(base: SimResult, test: SimResult,
         "base_avg": float(np.mean(b)), "test_avg": float(np.mean(t)),
         "base_p99": float(np.percentile(b, 99)),
         "test_p99": float(np.percentile(t, 99)),
+    }
+
+
+def sweep_speedup_stats(bases: list[SimResult], tests: list[SimResult],
+                        warmup: int = 5) -> dict[str, float]:
+    """Seed-paired speedups over a sweep: ``bases``/``tests`` are same-length
+    `postprocess_sweep` outputs run with matching seed grids; returns mean
+    and (population) std across the sweep — the paper-figure error bars."""
+    if len(bases) != len(tests):
+        raise ValueError(f"sweep lengths differ: {len(bases)} vs {len(tests)}")
+    per = [speedup_stats(b, t, warmup) for b, t in zip(bases, tests)]
+    avg = np.asarray([p["avg_speedup"] for p in per])
+    p99 = np.asarray([p["p99_speedup"] for p in per])
+    return {
+        "avg_speedup": float(avg.mean()), "avg_speedup_std": float(avg.std()),
+        "p99_speedup": float(p99.mean()), "p99_speedup_std": float(p99.std()),
+        "n_points": len(per),
     }

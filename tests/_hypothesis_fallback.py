@@ -1,0 +1,61 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The tier-1 suite must always collect (hypothesis is an optional test extra,
+`pip install -e .[test]`).  When the real library is missing, `given` runs
+the decorated test over a small deterministic grid of each strategy's range
+(bounds, midpoints, and a golden-ratio interior point) instead of random
+examples — far weaker than real property testing, but it keeps the
+properties exercised on every run with zero extra dependencies.
+"""
+from __future__ import annotations
+
+import itertools
+
+
+class _Floats:
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def samples(self):
+        span = self.hi - self.lo
+        pts = [self.lo, self.lo + 0.25 * span, self.lo + 0.5 * span,
+               self.lo + 0.618 * span, self.hi]
+        return sorted(set(pts))
+
+
+class _Integers:
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def samples(self):
+        pts = {self.lo, self.hi, (self.lo + self.hi) // 2,
+               self.lo + (self.hi - self.lo) // 3}
+        return sorted(pts)
+
+
+class strategies:
+    floats = _Floats
+    integers = _Integers
+
+
+def given(**named_strategies):
+    names = list(named_strategies)
+    combos = list(itertools.product(
+        *[named_strategies[n].samples() for n in names]))
+
+    def deco(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-argument
+        # signature, not the strategy parameters (they are not fixtures)
+        def wrapper():
+            for combo in combos:
+                fn(**dict(zip(names, combo)))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco

@@ -190,3 +190,35 @@ def test_mltcp_tick_kernel_matches_core(case, n):
             np.asarray(getattr(got_st.det, name)),
             np.asarray(getattr(want_st.det, name)), rtol=1e-6,
             err_msg=f"det.{name}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_n_boundaries_match_over_fuzzed_sequences(seed):
+    """Fuzz Algorithm 1's boundary counter across many ticks: the kernel
+    wrapper's out-of-kernel counter (via `iteration.boundary_mask`) must
+    track the jnp oracle exactly — one source of truth, no drift."""
+    n, n_ticks, dt = 33, 120, 2e-5
+    cfg = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO),
+                                  variant=int(Variant.WI), tick_dt=dt),
+                      slope=1.75, intercept=0.25, init_comm_gap=3 * dt)
+    st_ref = init_state(n, cfg)
+    st_ker = init_state(n, cfg)
+    total = jnp.full((n,), 2e6)
+    f2j = jnp.arange(n) % 4
+    rng = np.random.default_rng(seed)
+    for i in range(n_ticks):
+        # bursty on/off ack pattern so gaps straddle g * iter_gap
+        burst = rng.uniform(size=n) < (0.9 if (i // 10) % 2 == 0 else 0.05)
+        fb = Feedback(
+            num_acks=jnp.asarray(burst * rng.uniform(1, 20, n), jnp.float32),
+            loss=jnp.asarray(rng.uniform(size=n) < 0.03),
+            cnp=jnp.zeros((n,), bool),
+            now=jnp.asarray(i * dt, jnp.float32))
+        st_ref, _ = cc_tick(cfg, st_ref, fb, total, flow_to_job=f2j, n_jobs=4)
+        st_ker, _ = ops.mltcp_cc_tick(cfg, st_ker, fb, total,
+                                      flow_to_job=f2j, n_jobs=4)
+        np.testing.assert_array_equal(
+            np.asarray(st_ker.det.n_boundaries),
+            np.asarray(st_ref.det.n_boundaries),
+            err_msg=f"n_boundaries drift at tick {i}")
+    assert int(np.asarray(st_ref.det.n_boundaries).max()) > 0

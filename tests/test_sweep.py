@@ -1,0 +1,148 @@
+"""Batched sweep engine (`netsim.simulate_sweep`) — correctness invariants.
+
+The contract: a sweep is *numerically identical* to running each grid point
+through the per-config `simulate` path (which itself is a K=1 sweep), while
+compiling exactly once per batch shape.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.netsim import engine
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+DT = 2e-5
+
+
+def _proto(algo=Algo.RENO, variant=Variant.WI, **kw):
+    return MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant),
+                                   tick_dt=DT, rtt=100e-6),
+                       slope=1.75, intercept=0.25, **kw)
+
+
+def _cfg(n_jobs=2, sim_time=0.6, seed=3, **kw):
+    topo = netsim.dumbbell(n_jobs, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.0075] * n_jobs, [25e6] * n_jobs)
+    return netsim.SimConfig(topo=topo, jobs=jobs,
+                            protocol=kw.pop("protocol", _proto()),
+                            sim_time=sim_time, dt=DT, seed=seed, **kw)
+
+
+def _tree_equal(a, b) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return len(leaves_a) == len(leaves_b) and all(
+        np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(leaves_a, leaves_b))
+
+
+def test_k1_sweep_matches_simulate_bitwise():
+    cfg = _cfg()
+    raw = netsim.simulate(cfg)
+    sweep = netsim.make_sweep(cfg)
+    assert netsim.sweep_len(sweep) == 1
+    raw_k1 = jax.tree_util.tree_map(lambda x: x[0],
+                                    netsim.simulate_sweep(cfg, sweep))
+    assert _tree_equal(raw, raw_k1)
+
+
+def test_slope_sweep_matches_sequential_runs():
+    """A K=4 slope sweep == 4 sequential statically-reconfigured runs."""
+    cfg = _cfg()
+    slopes = [0.5, 1.0, 1.75, 2.5]
+    sweep, points = netsim.grid_sweep(cfg, slope=slopes)
+    assert [p["slope"] for p in points] == slopes
+    results = netsim.postprocess_sweep(cfg, netsim.simulate_sweep(cfg, sweep))
+    assert len(results) == 4
+    for s, res in zip(slopes, results):
+        cfg_s = dataclasses.replace(
+            cfg, protocol=dataclasses.replace(cfg.protocol, slope=s))
+        seq = netsim.postprocess(cfg_s, netsim.simulate(cfg_s))
+        for j in range(2):
+            assert res.iter_times[j].shape == seq.iter_times[j].shape
+            np.testing.assert_allclose(res.iter_times[j], seq.iter_times[j],
+                                       rtol=1e-4, atol=1e-6)
+    # the sweep must actually change behaviour across the axis
+    avgs = [r.avg_iter(0) for r in results]
+    assert max(avgs) > min(avgs)
+
+
+def test_seed_sweep_matches_sequential_runs():
+    cfg = _cfg()
+    seeds = [0, 7]
+    results = netsim.postprocess_sweep(
+        cfg, netsim.simulate_sweep(cfg, netsim.make_sweep(cfg, seed=seeds)))
+    for seed, res in zip(seeds, results):
+        seq = netsim.postprocess(
+            cfg, netsim.simulate(dataclasses.replace(cfg, seed=seed)))
+        np.testing.assert_allclose(np.concatenate(res.iter_times),
+                                   np.concatenate(seq.iter_times),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_sweep_compiles_once():
+    """A K>=8 grid costs exactly one trace of the sweep program."""
+    cfg = _cfg(sim_time=0.1)
+    sweep, _ = netsim.grid_sweep(cfg, slope=[0.5, 1.0, 1.75, 2.5],
+                                 intercept=[0.1, 0.5])
+    assert netsim.sweep_len(sweep) == 8
+    before = engine.TRACE_COUNT
+    netsim.simulate_sweep(cfg, sweep)
+    assert engine.TRACE_COUNT == before + 1
+    # same static config + batch shape, new values: zero retraces
+    sweep2, _ = netsim.grid_sweep(cfg, slope=[0.6, 1.1, 1.8, 2.6],
+                                  intercept=[0.15, 0.55])
+    netsim.simulate_sweep(cfg, sweep2)
+    assert engine.TRACE_COUNT == before + 1
+
+
+def test_sweep_output_shapes_survive_postprocess():
+    cfg = _cfg(sim_time=0.3)
+    k = 3
+    raw = netsim.simulate_sweep(cfg, netsim.make_sweep(cfg, seed=[0, 1, 2]))
+    assert raw.iter_times.shape[0] == k
+    assert raw.trace_util.shape[0] == k
+    results = netsim.postprocess_sweep(cfg, raw)
+    assert len(results) == k
+    for res in results:
+        assert res.n_jobs == 2
+        assert res.trace_util.ndim == 2            # [C, M], sweep axis gone
+        assert res.trace_incomm.shape[1] == 2
+        assert np.isfinite(res.avg_iter(0))
+
+
+def test_red_threshold_sweep_changes_drop_rate():
+    """RED thresholds ride the sweep axis: tighter thresholds, more drops."""
+    cfg = _cfg(sim_time=0.5)
+    results = netsim.postprocess_sweep(
+        cfg, netsim.simulate_sweep(
+            cfg, netsim.make_sweep(cfg, red_qmin=[20e3, 150e3],
+                                   red_qmax=[200e3, 1.5e6])))
+    assert results[0].drops_per_s > results[1].drops_per_s
+
+
+def test_make_sweep_validates():
+    cfg = _cfg(sim_time=0.1)
+    with pytest.raises(ValueError, match="unknown sweep field"):
+        netsim.make_sweep(cfg, bogus=[1.0, 2.0])
+    with pytest.raises(ValueError, match="disagree"):
+        netsim.make_sweep(cfg, slope=[1.0, 2.0], intercept=[0.1, 0.2, 0.3])
+    with pytest.raises(ValueError, match="leading sweep axis"):
+        netsim.simulate_sweep(cfg, netsim.sweep_of(cfg))  # unbatched
+
+
+def test_static_factors_sweep():
+    """The Static [67] baseline's per-job factors are sweepable.
+
+    (Static needs a non-OFF variant so the factors reach the increase hook.)
+    """
+    cfg = _cfg(protocol=_proto(variant=Variant.WI), sim_time=0.5)
+    factors = np.asarray([[1.5, 0.5], [1.0, 1.0]], np.float32)  # [K, J]
+    results = netsim.postprocess_sweep(
+        cfg, netsim.simulate_sweep(
+            cfg, netsim.make_sweep(cfg, static_job_factors=factors)))
+    # favored job 0 under skewed factors beats its even-factor self
+    assert results[0].avg_iter(0) < results[1].avg_iter(0) * 1.05
