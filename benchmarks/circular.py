@@ -4,6 +4,9 @@ Three GPT-2 jobs on the triangle: each competes with a different job on each
 of its two links; the affinity graph has a loop, so Cassini has no feasible
 schedule and Static has no consistent unfairness assignment. MLQCN converges
 anyway (the favoritism signal is per-flow local).
+
+One plan: scheme x seed (seed-averaged with error bars; the Cassini scheme
+carries its schedule as static config so it compiles separately).
 """
 from __future__ import annotations
 
@@ -16,24 +19,36 @@ from repro import netsim, workload
 def run() -> tuple[dict, int]:
     topo = netsim.triangle(sockets_per_job=2)
     profs = common.gpt2(3)
-    base = common.sim(topo, profs, common.protocol("dcqcn", "OFF"))
-    ml = common.sim(topo, profs, common.protocol("dcqcn", "WI"))
     sched, feasible = workload.cassini_schedule(
         topo, [p.scaled(common.WORK_SCALE) for p in profs])
-    cas = common.sim(topo, profs, common.protocol("dcqcn", "OFF"),
-                     cassini=sched)
-    sp = netsim.speedup_stats(base, ml)
-    sp_cas = netsim.speedup_stats(base, cas)
+
+    def build(pt):
+        variant = "WI" if pt["scheme"] == "mlqcn" else "OFF"
+        return common.build_cfg(
+            topo, profs, common.protocol("dcqcn", variant),
+            cassini=sched if pt["scheme"] == "cassini" else None)
+
+    pr = common.run_plan(common.plan(
+        build, name="fig14",
+        scheme=("base", "mlqcn", "cassini"), seed=common.seed_axis()))
+    base = pr.select(scheme="base")
+    ml = pr.select(scheme="mlqcn")
+    sp = netsim.sweep_speedup_stats(base, ml)
+    sp_cas = netsim.sweep_speedup_stats(base, pr.select(scheme="cassini"))
     out = {
         "cassini_has_schedule": feasible,       # False: loop detected
-        "base_interleave": round(netsim.mean_pairwise_interleave(base), 3),
-        "mlqcn_interleave": round(netsim.mean_pairwise_interleave(ml), 3),
+        "base_interleave": round(float(np.mean(
+            [netsim.mean_pairwise_interleave(r) for r in base])), 3),
+        "mlqcn_interleave": round(float(np.mean(
+            [netsim.mean_pairwise_interleave(r) for r in ml])), 3),
         "mlqcn_avg_speedup": round(sp["avg_speedup"], 3),
+        "mlqcn_avg_speedup_std": round(sp["avg_speedup_std"], 3),
         "mlqcn_p99_speedup": round(sp["p99_speedup"], 3),
         "cassini_avg_speedup": round(sp_cas["avg_speedup"], 3),
-        "mean_link_util_mlqcn": round(float(np.mean(ml.trace_util)), 3),
+        "mean_link_util_mlqcn": round(float(np.mean(
+            [np.mean(r.trace_util) for r in ml])), 3),
     }
-    return out, int(common.SIM_TIME / common.DT) * 3
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

@@ -1,5 +1,12 @@
 """Shared helpers for the paper-figure benchmarks.
 
+Every suite declares a `netsim.Plan` — named axes (scheme, F family, job
+count, seed, ...) over a config builder — and `netsim.run_plan` partitions
+the matrix into compile groups, so job-count grids share one padded program
+and every result carries its `SweepPoint` labels.  Suites report their
+simulated tick counts from `PlanResult.n_ticks` / `SimResult.cfg`, so the
+µs/tick CSV tracks the configs instead of hand-kept constants.
+
 Workload scaling: testbed iterations are O(100 ms); to keep CPU wall-time
 tractable the benchmarks run the same phase *ratios* scaled by
 ``WORK_SCALE`` (interleaving dynamics depend on ratios, not absolutes —
@@ -75,38 +82,39 @@ def build_cfg(topo, profiles, proto, *, sim_time=None, seed=1,
         **{**RED_BY_ALGO[algo], **kw})
 
 
-def sim(topo, profiles, proto, **kw) -> netsim.SimResult:
-    cfg = build_cfg(topo, profiles, proto, **kw)
-    raw = netsim.simulate(cfg)
-    return netsim.postprocess(cfg, raw)
+def plan(build, *, name: str = "", where=None, **axes) -> netsim.Plan:
+    """Declare an experiment plan from keyword axes.
 
-
-def sim_sweep(topo, profiles, proto, sweep_axes: dict,
-              **kw) -> list[netsim.SimResult]:
-    """Run a batched sweep (one compile) and return per-point SimResults.
-
-    ``sweep_axes`` maps SweepParams field names to value lists (paired
-    per-index, not a cartesian product — use `sim_grid` for grids).
+    Each ``axes`` value is either a value sequence or a `netsim.Axis`
+    (renamed to its keyword); ``build`` maps a point's label dict to its
+    `SimConfig`.  Run with `run_plan`.
     """
-    cfg = build_cfg(topo, profiles, proto, **kw)
-    sweep = netsim.make_sweep(cfg, **sweep_axes)
-    raw = netsim.simulate_sweep(cfg, sweep)
-    return netsim.postprocess_sweep(cfg, raw)
+    resolved = []
+    for key, v in axes.items():
+        if isinstance(v, netsim.Axis):
+            resolved.append(dataclasses.replace(v, name=key))
+        else:
+            resolved.append(netsim.Axis(key, tuple(v)))
+    return netsim.Plan(name=name, axes=tuple(resolved), build=build,
+                       where=where)
 
 
-def sim_grid(topo, profiles, proto, grid_axes: dict,
-             **kw) -> tuple[list[netsim.SimResult], list[dict]]:
-    """Cartesian-product sweep (one compile); returns (results, grid points)."""
-    cfg = build_cfg(topo, profiles, proto, **kw)
-    sweep, points = netsim.grid_sweep(cfg, **grid_axes)
-    raw = netsim.simulate_sweep(cfg, sweep)
-    return netsim.postprocess_sweep(cfg, raw), points
+def run_plan(p: netsim.Plan) -> netsim.PlanResult:
+    """Execute a plan (thin wrapper so suites share one entry point)."""
+    return netsim.run_plan(p)
 
 
-def sim_seeds(topo, profiles, proto, seeds=None, **kw) -> list[netsim.SimResult]:
-    """Multi-seed runs of one scenario as a single batched sweep."""
-    return sim_sweep(topo, profiles, proto,
-                     {"seed": list(SEEDS if seeds is None else seeds)}, **kw)
+def seed_axis(seeds=None) -> netsim.Axis:
+    """The shared multi-seed error-bar axis (a free `simulate_sweep` vmap
+    lane; every suite appends it to its plan)."""
+    return netsim.Axis("seed", tuple(SEEDS if seeds is None else seeds))
+
+
+def sim(topo, profiles, proto, **kw) -> netsim.SimResult:
+    """One simulation as a single-point plan (kept for one-off runs)."""
+    pr = run_plan(plan(lambda pt: build_cfg(topo, profiles, proto, **kw),
+                       name="single"))
+    return pr.results[0]
 
 
 @dataclasses.dataclass

@@ -3,9 +3,9 @@
 Two GPT-2 data-parallel jobs share the dumbbell; compare default Reno /
 CUBIC / DCQCN against their MLTCP variants on: interleave convergence
 (iterations until the comm phases separate), drop/ECN-mark rate, and avg /
-p99 training-iteration times.  Every scheme runs its multi-seed grid as one
-batched `simulate_sweep`, so the reported metrics are seed-averaged with
-error bars for free.
+p99 training-iteration times.  One plan: algo x variant x seed — each
+(algo, variant) scheme is its own compile group (the program differs), and
+the seed axis batches the error-bar runs inside each group.
 """
 from __future__ import annotations
 
@@ -34,11 +34,8 @@ def _ratio(nums, dens) -> float:
     return nums / dens if dens > 0 else float("inf")
 
 
-def run_one(algo: str, sockets: int = 2) -> dict:
-    topo = netsim.dumbbell(2, sockets_per_job=sockets)
-    profs = common.gpt2(2)
-    base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
-    ml = common.sim_seeds(topo, profs, common.protocol(algo, "WI"))
+def _summarize(algo: str, base: list[netsim.SimResult],
+               ml: list[netsim.SimResult]) -> dict:
     sp = netsim.sweep_speedup_stats(base, ml)
     return {
         "algo": algo,
@@ -58,13 +55,19 @@ def run_one(algo: str, sockets: int = 2) -> dict:
     }
 
 
-def run(algos=("reno", "cubic", "dcqcn")) -> tuple[dict, int]:
-    out = {}
-    for algo in algos:
-        out[algo] = run_one(algo)
-    n_ticks = int(common.SIM_TIME / common.DT) * 2 * len(algos) \
-        * len(common.SEEDS)
-    return out, n_ticks
+def run(algos=("reno", "cubic", "dcqcn"), sockets: int = 2) -> tuple[dict, int]:
+    topo = netsim.dumbbell(2, sockets_per_job=sockets)
+    profs = common.gpt2(2)
+    pr = common.run_plan(common.plan(
+        lambda pt: common.build_cfg(topo, profs,
+                                    common.protocol(pt["algo"], pt["variant"])),
+        name="fig7-9",
+        algo=tuple(algos), variant=("OFF", "WI"), seed=common.seed_axis()))
+    out = {algo: _summarize(algo,
+                            pr.select(algo=algo, variant="OFF"),
+                            pr.select(algo=algo, variant="WI"))
+           for algo in algos}
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

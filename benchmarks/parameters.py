@@ -2,14 +2,15 @@
 
   fig15: aggressiveness functions F1..F4 (increasing) interleave and speed
          up; F5, F6 (decreasing) do not — the SRPT-reinforcement claim.
-  fig16: S x I sweep heatmap of MLTCP-Reno speedups — the whole grid runs
-         as ONE `netsim.simulate_sweep` call (one trace, one compile).
+  fig16: S x I sweep heatmap of MLTCP-Reno speedups — slope/intercept are
+         dynamic axes, so the whole heatmap (plus its baseline) is ONE plan
+         with exactly two compile groups (OFF, WI).
   fig17: WI vs MD variants perform similarly (Reno and CUBIC).
 
-fig15/fig17 vary *static* protocol structure (F family, variant) so each
-scheme compiles once, but every scheme runs a batched multi-seed sweep for
-error bars; fig16 varies only traced scalars, so the full heatmap shares a
-single compiled program with the seed axis folded into the same batch.
+Each suite is one plan; static axes (F family, variant, algorithm) become
+compile groups, dynamic axes (slope, intercept, seed) ride the batched
+sweep inside each group, and selections by axis label pair the seeds for
+the error bars.
 """
 from __future__ import annotations
 
@@ -23,11 +24,20 @@ def fig15_agg_functions(fns=("F1", "F2", "F3", "F4", "F5", "F6")
                         ) -> tuple[dict, int]:
     topo = netsim.dumbbell(3, sockets_per_job=2)
     profs = common.gpt2(3)
-    base = common.sim_seeds(topo, profs, common.protocol("reno", "OFF"))
+    schemes = ("OFF",) + tuple(fns)
+
+    def build(pt):
+        s = pt["scheme"]
+        proto = (common.protocol("reno", "OFF") if s == "OFF"
+                 else common.protocol("reno", "WI", f_spec=s))
+        return common.build_cfg(topo, profs, proto)
+
+    pr = common.run_plan(common.plan(build, name="fig15",
+                                     scheme=schemes, seed=common.seed_axis()))
+    base = pr.select(scheme="OFF")
     out = {}
     for f in fns:
-        res = common.sim_seeds(topo, profs,
-                               common.protocol("reno", "WI", f_spec=f))
+        res = pr.select(scheme=f)
         sp = netsim.sweep_speedup_stats(base, res)
         inter = [netsim.mean_pairwise_interleave(r) for r in res]
         out[f] = {
@@ -35,56 +45,64 @@ def fig15_agg_functions(fns=("F1", "F2", "F3", "F4", "F5", "F6")
             "avg_speedup_std": round(sp["avg_speedup_std"], 3),
             "interleave": round(float(np.mean(inter)), 3),
         }
-    n_sims = len(common.SEEDS) * (len(fns) + 1)
-    return out, int(common.SIM_TIME / common.DT) * n_sims
+    return out, pr.n_ticks
 
 
 def fig16_heatmap(slopes=(0.5, 1.0, 1.75, 2.5),
                   intercepts=(0.1, 0.25, 0.5, 1.0)) -> tuple[dict, int]:
     topo = netsim.dumbbell(2, sockets_per_job=2)
     profs = common.gpt2(2)
-    seeds = list(common.SEEDS)
-    base = common.sim_seeds(topo, profs, common.protocol("reno", "OFF"))
-    # one batched program: K = |S| * |I| * |seeds| grid points
-    results, points = common.sim_grid(
-        topo, profs, common.protocol("reno", "WI"),
-        {"slope": slopes, "intercept": intercepts, "seed": seeds})
+
+    # The baseline ignores S/I, so `where` prunes it to a single (S, I)
+    # cell; the WI group's full S x I x seed grid is one compiled program.
+    pr = common.run_plan(common.plan(
+        lambda pt: common.build_cfg(topo, profs,
+                                    common.protocol("reno", pt["variant"])),
+        name="fig16",
+        where=lambda pt: pt["variant"] == "WI" or (
+            pt["slope"] == slopes[0] and pt["intercept"] == intercepts[0]),
+        variant=("OFF", "WI"), slope=tuple(slopes),
+        intercept=tuple(intercepts), seed=common.seed_axis()))
+    assert pr.n_compile_groups == 2, pr.n_compile_groups
+
+    base = pr.select(variant="OFF")
     grid = {}
-    for (s, i) in [(s, i) for s in slopes for i in intercepts]:
-        idx = [k for k, p in enumerate(points)
-               if p["slope"] == s and p["intercept"] == i]
-        # pair each seed's MLTCP run with the same seed's baseline
-        sp = netsim.sweep_speedup_stats(base, [results[k] for k in idx])
-        grid[f"S={s},I={i}"] = {
-            "avg_speedup": round(sp["avg_speedup"], 3),
-            "p99_speedup": round(sp["p99_speedup"], 3),
-            "avg_speedup_std": round(sp["avg_speedup_std"], 3),
-        }
+    for s in slopes:
+        for i in intercepts:
+            # seed-paired: selections share the (fastest) seed axis order
+            sp = netsim.sweep_speedup_stats(
+                base, pr.select(variant="WI", slope=s, intercept=i))
+            grid[f"S={s},I={i}"] = {
+                "avg_speedup": round(sp["avg_speedup"], 3),
+                "p99_speedup": round(sp["p99_speedup"], 3),
+                "avg_speedup_std": round(sp["avg_speedup_std"], 3),
+            }
     best = max(grid, key=lambda k: grid[k]["avg_speedup"])
     grid["best"] = {"at": best, **grid[best]}
-    n_sims = len(points) + len(seeds)
-    return grid, int(common.SIM_TIME / common.DT) * n_sims
+    return grid, pr.n_ticks
 
 
 def fig17_wi_vs_md() -> tuple[dict, int]:
     topo = netsim.dumbbell(2, sockets_per_job=2)
     profs = common.gpt2(2)
+    pr = common.run_plan(common.plan(
+        lambda pt: common.build_cfg(topo, profs,
+                                    common.protocol(pt["algo"], pt["variant"])),
+        name="fig17",
+        algo=("reno", "cubic"), variant=("OFF", "WI", "MD"),
+        seed=common.seed_axis()))
     out = {}
-    n = 0
     for algo in ("reno", "cubic"):
-        base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
+        base = pr.select(algo=algo, variant="OFF")
         for variant in ("WI", "MD"):
-            res = common.sim_seeds(topo, profs,
-                                   common.protocol(algo, variant))
-            sp = netsim.sweep_speedup_stats(base, res)
+            sp = netsim.sweep_speedup_stats(
+                base, pr.select(algo=algo, variant=variant))
             out[f"{algo}-{variant}"] = {
                 "avg_speedup": round(sp["avg_speedup"], 3),
                 "p99_speedup": round(sp["p99_speedup"], 3),
                 "avg_speedup_std": round(sp["avg_speedup_std"], 3),
             }
-            n += len(common.SEEDS)
-        n += len(common.SEEDS)
-    return out, int(common.SIM_TIME / common.DT) * n
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

@@ -4,6 +4,11 @@ Sweep compatibility by varying the jobs' compute:comm ratios (the paper
 varies batch size). Static = fixed unfair per-job factors; MLQCN adapts.
 The paper: below compat ~0.7 Static's p99 drops under 1.0 (worse than
 default DCQCN) while MLQCN stays >= 1.
+
+One plan: compute-scale x scheme x seed.  The compute scale reshapes the
+(static) JobSpec, so each (scale, scheme) cell is a compile group; the
+Static baseline's per-job factors ride the sweep as dynamic values, and
+every cell reports seed-averaged numbers.
 """
 from __future__ import annotations
 
@@ -14,6 +19,8 @@ import numpy as np
 from benchmarks import common
 from repro import netsim, workload
 
+STATIC_FACTORS = np.asarray([1.3, 1.0, 0.7])
+
 
 def _job_with_compute(base, compute_s: float):
     return dataclasses.replace(base, compute_s=(compute_s,))
@@ -22,30 +29,41 @@ def _job_with_compute(base, compute_s: float):
 def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
     topo = netsim.dumbbell(3, sockets_per_job=2)
     base_prof = workload.profile_for("gpt2")
-    out = {}
-    n_sims = 0
-    for cs in compute_scales:
-        profs = [_job_with_compute(base_prof, base_prof.compute_s[0] * cs)
-                 for _ in range(3)]
-        compat = workload.compatibility_score(
-            profs[0].scaled(common.WORK_SCALE),
-            profs[1].scaled(common.WORK_SCALE))
-        base = common.sim(topo, profs, common.protocol("dcqcn", "OFF"))
-        ml = common.sim(topo, profs, common.protocol("dcqcn", "WI"))
+
+    def profs_for(cs):
+        return [_job_with_compute(base_prof, base_prof.compute_s[0] * cs)
+                for _ in range(3)]
+
+    def build(pt):
         # Static [67]: constant per-job factors replace F; needs a non-OFF
         # variant so the factors reach the increase hook
-        static = common.sim(topo, profs, common.protocol("dcqcn", "WI"),
-                            static_job_factors=np.asarray([1.3, 1.0, 0.7]))
-        sp_ml = netsim.speedup_stats(base, ml)
-        sp_st = netsim.speedup_stats(base, static)
+        variant = "OFF" if pt["scheme"] == "base" else "WI"
+        return common.build_cfg(
+            topo, profs_for(pt["cs"]), common.protocol("dcqcn", variant),
+            static_job_factors=(STATIC_FACTORS if pt["scheme"] == "static"
+                                else None))
+
+    pr = common.run_plan(common.plan(
+        build, name="fig13",
+        cs=tuple(compute_scales), scheme=("base", "mlqcn", "static"),
+        seed=common.seed_axis()))
+    out = {}
+    for cs in compute_scales:
+        compat = workload.compatibility_score(
+            profs_for(cs)[0].scaled(common.WORK_SCALE),
+            profs_for(cs)[1].scaled(common.WORK_SCALE))
+        base = pr.select(cs=cs, scheme="base")
+        sp_ml = netsim.sweep_speedup_stats(base,
+                                           pr.select(cs=cs, scheme="mlqcn"))
+        sp_st = netsim.sweep_speedup_stats(base,
+                                           pr.select(cs=cs, scheme="static"))
         out[f"compat={compat:.2f}"] = {
             "mlqcn_avg": round(sp_ml["avg_speedup"], 3),
             "mlqcn_p99": round(sp_ml["p99_speedup"], 3),
             "static_avg": round(sp_st["avg_speedup"], 3),
             "static_p99": round(sp_st["p99_speedup"], 3),
         }
-        n_sims += 3
-    return out, int(common.SIM_TIME / common.DT) * n_sims
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time per
 simulator tick across the benchmark's simulations) and writes the full
 derived metrics to results/benchmarks.json.
 
+Each suite returns ``(derived_metrics, n_ticks)`` where n_ticks is summed
+from the actual configs it ran (`PlanResult.n_ticks`) — not a hand-kept
+constant — so the µs/tick column stays honest as suites grow axes or
+change sim times.
+
 Quick mode (default) scales workloads per benchmarks/common.py; set
 REPRO_FULL=1 for paper-scale runs.
 """

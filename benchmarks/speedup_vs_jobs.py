@@ -3,9 +3,11 @@
 The paper: MLTCP-Reno plateaus ~1.3x avg / 1.5x p99; MLQCN reaches 2x / 4x
 as DCQCN's congestion collapse (pause storms) worsens with more jobs.
 
-Each (algo, n_jobs) cell changes the topology (static), so it compiles its
-own program — but baseline and MLTCP both run their whole multi-seed grid
-as one batched `simulate_sweep`, and the reported numbers carry error bars.
+One plan per algorithm: variant x job-count x seed.  The job-count axis is
+*padded* — every count runs on the largest dumbbell with trailing jobs
+masked off (`SweepParams.job_active`) — so the whole grid compiles exactly
+twice (once per variant) instead of once per (variant, count) cell, and the
+reported numbers carry multi-seed error bars.
 """
 from __future__ import annotations
 
@@ -13,23 +15,35 @@ from benchmarks import common
 from repro import netsim
 
 
+def _plan(algo: str, job_counts) -> netsim.Plan:
+    def build(pt):
+        n = pt["n_jobs"]
+        return common.build_cfg(netsim.dumbbell(n, sockets_per_job=2),
+                                common.gpt2(n),
+                                common.protocol(algo, pt["variant"]))
+    return common.plan(build, name=f"fig10-{algo}",
+                       variant=("OFF", "WI"),
+                       n_jobs=tuple(job_counts),
+                       seed=common.seed_axis())
+
+
 def run(algos=("reno", "dcqcn"), job_counts=(2, 3, 4, 5, 6)) -> tuple[dict, int]:
     out = {}
-    total_sims = 0
+    n_ticks = 0
     for algo in algos:
+        pr = common.run_plan(_plan(algo, job_counts))
+        assert pr.n_compile_groups == 2, pr.n_compile_groups
         for n in job_counts:
-            topo = netsim.dumbbell(n, sockets_per_job=2)
-            profs = common.gpt2(n)
-            base = common.sim_seeds(topo, profs, common.protocol(algo, "OFF"))
-            ml = common.sim_seeds(topo, profs, common.protocol(algo, "WI"))
-            sp = netsim.sweep_speedup_stats(base, ml)
+            sp = netsim.sweep_speedup_stats(
+                pr.select(variant="OFF", n_jobs=n),
+                pr.select(variant="WI", n_jobs=n))
             out[f"{algo}_{n}jobs"] = {
                 "avg_speedup": round(sp["avg_speedup"], 3),
                 "p99_speedup": round(sp["p99_speedup"], 3),
                 "avg_speedup_std": round(sp["avg_speedup_std"], 3),
             }
-            total_sims += 2 * len(common.SEEDS)
-    return out, int(common.SIM_TIME / common.DT) * total_sims
+        n_ticks += pr.n_ticks
+    return out, n_ticks
 
 
 if __name__ == "__main__":

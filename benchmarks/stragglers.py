@@ -4,6 +4,10 @@ Two GPT-2 jobs with per-iteration straggle probability p (sleep 5-10% of the
 isolation time). Compare MLQCN and Cassini (both normalized to default
 DCQCN). The paper: MLQCN's speedup is flat in p; Cassini's tail collapses
 beyond p ~ 10% because its agent forces re-alignment skips.
+
+One plan: p x scheme x seed.  The straggle probability lives in the (static)
+JobSpec so each (p, scheme) cell compiles once, with the multi-seed error
+bars batched on the sweep axis inside it.
 """
 from __future__ import annotations
 
@@ -14,28 +18,33 @@ from repro import netsim, workload
 def run(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> tuple[dict, int]:
     topo = netsim.dumbbell(2, sockets_per_job=2)
     profs = common.gpt2(2)
+    sched, _ = workload.cassini_schedule(
+        topo, [pr.scaled(common.WORK_SCALE) for pr in profs])
+
+    def build(pt):
+        variant = "WI" if pt["scheme"] == "mlqcn" else "OFF"
+        return common.build_cfg(
+            topo, profs, common.protocol("dcqcn", variant),
+            straggle_prob=[pt["p"], pt["p"]],
+            cassini=sched if pt["scheme"] == "cassini" else None)
+
+    pr = common.run_plan(common.plan(
+        build, name="fig12",
+        p=tuple(probs), scheme=("base", "mlqcn", "cassini"),
+        seed=common.seed_axis()))
     out = {}
-    n_sims = 0
     for p in probs:
-        sp_vec = [p, p]
-        base = common.sim(topo, profs, common.protocol("dcqcn", "OFF"),
-                          straggle_prob=sp_vec)
-        ml = common.sim(topo, profs, common.protocol("dcqcn", "WI"),
-                        straggle_prob=sp_vec)
-        sched, _ = workload.cassini_schedule(
-            topo, [pr.scaled(common.WORK_SCALE) for pr in profs])
-        cas = common.sim(topo, profs, common.protocol("dcqcn", "OFF"),
-                         straggle_prob=sp_vec, cassini=sched)
-        sp_ml = netsim.speedup_stats(base, ml)
-        sp_cas = netsim.speedup_stats(base, cas)
+        base = pr.select(p=p, scheme="base")
+        sp_ml = netsim.sweep_speedup_stats(base, pr.select(p=p, scheme="mlqcn"))
+        sp_cas = netsim.sweep_speedup_stats(base,
+                                            pr.select(p=p, scheme="cassini"))
         out[f"p={p}"] = {
             "mlqcn_avg": round(sp_ml["avg_speedup"], 3),
             "mlqcn_p99": round(sp_ml["p99_speedup"], 3),
             "cassini_avg": round(sp_cas["avg_speedup"], 3),
             "cassini_p99": round(sp_cas["p99_speedup"], 3),
         }
-        n_sims += 3
-    return out, int(common.SIM_TIME / common.DT) * n_sims
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

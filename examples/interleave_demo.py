@@ -7,24 +7,22 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
-
 from repro import netsim, workload  # noqa: E402
 from repro.core import Algo, CCParams, MLTCPConfig, Variant  # noqa: E402
 
 DT = 2e-5
 
 
-def run(variant):
+def build(pt):
     topo = netsim.dumbbell(2, sockets_per_job=2)
     prof = workload.profile_for("gpt2").scaled(0.25)
     jobs = workload.jobspec_from_profiles([prof, prof])
+    variant = Variant.WI if pt["scheme"] == "mltcp" else Variant.OFF
     proto = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO), variant=int(variant),
                                     tick_dt=DT, rtt=100e-6),
                         slope=1.75, intercept=0.25)
-    cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
-                           sim_time=3.0, dt=DT, seed=1, n_chunks=600)
-    return netsim.postprocess(cfg, netsim.simulate(cfg))
+    return netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
+                            sim_time=3.0, dt=DT, seed=1, n_chunks=600)
 
 
 def ascii_trace(res, title, tail=120):
@@ -36,8 +34,14 @@ def ascii_trace(res, title, tail=120):
 
 
 def main():
-    base = run(Variant.OFF)
-    ml = run(Variant.WI)
+    # one declarative plan: the scheme axis is static (the traced program
+    # differs), so run_plan compiles two programs and labels both results
+    plan = netsim.Plan(name="interleave-demo",
+                       axes=(netsim.Axis("scheme", ("default", "mltcp")),),
+                       build=build)
+    result = netsim.run_plan(plan)
+    (base,), (ml,) = (result.select(scheme="default"),
+                      result.select(scheme="mltcp"))
     ascii_trace(base, "default Reno — comm phases collide")
     ascii_trace(ml, "MLTCP-Reno — comm phases interleave")
     print(f"\ninterleave score: {netsim.mean_pairwise_interleave(base):.2f} "

@@ -40,17 +40,21 @@ def simulate_shared_cluster(arch_ids: list[str], *, algo: str = "dcqcn",
     red = (dict(red_qmin=50e3, red_qmax=400e3, red_pmax=0.2)
            if algo == "dcqcn" else {})
 
-    def run(variant):
+    def build(pt):
+        variant = Variant.WI if pt["scheme"] == "mltcp" else Variant.OFF
         proto = MLTCPConfig(
             cc=CCParams(algo=int(algo_id), variant=int(variant),
                         tick_dt=dt, rtt=100e-6),
             slope=slope, intercept=intercept)
-        cfg = netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
-                               sim_time=sim_time, dt=dt, seed=seed, **red)
-        return netsim.postprocess(cfg, netsim.simulate(cfg))
+        return netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
+                                sim_time=sim_time, dt=dt, seed=seed, **red)
 
-    base = run(Variant.OFF)
-    ml = run(Variant.WI)
+    result = netsim.run_plan(netsim.Plan(
+        name="shared-cluster",
+        axes=(netsim.Axis("scheme", ("default", "mltcp")),),
+        build=build))
+    (base,), (ml,) = (result.select(scheme="default"),
+                      result.select(scheme="mltcp"))
     sp = netsim.speedup_stats(base, ml)
     return ClusterReport(
         jobs=arch_ids,

@@ -4,7 +4,11 @@ The evaluation substrate replacing the paper's 12-server testbed: links with
 FIFO queues and RED/ECN, per-flow multi-hop routing, RTT-delayed feedback,
 and periodic DNN-job traffic — all stepped by a single `jax.lax.scan`.
 Parameter/seed sweeps batch over a leading vmap axis (`simulate_sweep`):
-one trace, one compile, K simulations per device program.
+one trace, one compile, K simulations per device program.  The experiment
+layer (`Axis`/`Plan`/`run_plan`) declares whole evaluation matrices over
+static *and* dynamic axes and lowers them onto that sweep axis, one compile
+group per distinct static signature, with job-count grids padded + masked
+into a single group and K optionally sharded across local devices.
 """
 
 from repro.netsim.topology import Topology, dumbbell, triangle, two_tier
@@ -13,12 +17,21 @@ from repro.netsim.engine import (
     JobSpec,
     SimConfig,
     SweepParams,
+    SweepPoint,
     grid_sweep,
     make_sweep,
     simulate,
     simulate_sweep,
     sweep_len,
     sweep_of,
+    sweep_slice,
+)
+from repro.netsim.experiment import (
+    Axis,
+    Plan,
+    PlanResult,
+    restrict_workload,
+    run_plan,
 )
 from repro.netsim.metrics import (
     SimResult,
@@ -34,8 +47,9 @@ from repro.netsim.metrics import (
 __all__ = [
     "Topology", "dumbbell", "triangle", "two_tier",
     "CassiniSchedule", "SimConfig", "JobSpec", "simulate",
-    "SweepParams", "simulate_sweep", "make_sweep", "grid_sweep",
-    "sweep_len", "sweep_of",
+    "SweepParams", "SweepPoint", "simulate_sweep", "make_sweep",
+    "grid_sweep", "sweep_len", "sweep_of", "sweep_slice",
+    "Axis", "Plan", "PlanResult", "restrict_workload", "run_plan",
     "SimResult", "interleave_score", "iteration_times",
     "mean_pairwise_interleave", "postprocess", "postprocess_sweep",
     "speedup_stats", "sweep_speedup_stats",

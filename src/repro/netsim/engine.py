@@ -8,9 +8,12 @@ Configuration is split (DESIGN.md §3): `SimConfig` is the *static* half —
 topology, jobs, algorithm/variant choices, everything that shapes the traced
 program — and `SweepParams` is the *dynamic* half: protocol scalars (slope,
 intercept, g, gamma, INIT_COMM_GAP), RED thresholds, the Static-baseline job
-factors and the PRNG seed, carried as traced values.  `simulate_sweep` vmaps
-the whole chunked scan over a leading sweep axis, so a K-point parameter /
-seed grid is one trace, one compile, and one device program instead of K.
+factors, the PRNG seed and the `job_active` padding mask, carried as traced
+values.  `simulate_sweep` vmaps the whole chunked scan over a leading sweep
+axis, so a K-point parameter / seed grid is one trace, one compile, and one
+device program instead of K.  The experiment layer (`netsim.experiment`,
+DESIGN.md §5) lowers whole evaluation matrices — static axes included —
+onto this sweep axis, one compile group per static signature.
 
 Model summary (hardware-adaptation notes in DESIGN.md §2):
   * fluid flows: each tick a flow injects ``min(rate*dt, bytes_left)``;
@@ -151,6 +154,14 @@ class SweepParams(NamedTuple):
 
     Unbatched (scalar) instances describe a single simulation; batched
     instances carry a leading [K] axis on every non-None leaf.
+
+    ``job_active`` is the padded-jobs axis (DESIGN.md §5): a [J] bool mask
+    that deactivates trailing jobs of an over-provisioned fabric, so a
+    job-count grid (Fig. 10's 2..8 jobs) runs every point on the *largest*
+    topology inside one compile group instead of one compile per count.
+    Inactive jobs never start, so their flows inject nothing and are inert
+    (lane-stable RNG keeps the active lanes bit-comparable to an unpadded
+    run).  None means "all jobs active" and adds no masking ops.
     """
 
     slope: Array                # F(x) = slope * x + intercept      (Eq. 3)
@@ -163,12 +174,19 @@ class SweepParams(NamedTuple):
     red_pmax: Array             # RED mark/drop probability at the knee
     seed: Array                 # int32 PRNG seed
     static_job_factors: Optional[Array]  # [J] Static-baseline factors or None
+    job_active: Optional[Array] = None   # [J] bool mask (padded-jobs axis)
 
     def dyn(self) -> core.DynamicParams:
         """The protocol-layer slice, for `core.cc_tick`."""
         return core.DynamicParams(slope=self.slope, intercept=self.intercept,
                                   g=self.g, gamma=self.gamma,
                                   init_comm_gap=self.init_comm_gap)
+
+
+# Per-sweep-point shapes/dtypes: most fields are scalars; the per-job
+# fields carry a [J] axis per point ([K, J] batched).
+_POINT_NDIM = {"static_job_factors": 1, "job_active": 1}
+_FIELD_DTYPE = {"seed": jnp.int32, "job_active": jnp.bool_}
 
 
 def sweep_of(cfg: SimConfig) -> SweepParams:
@@ -195,8 +213,9 @@ def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
     """Build a batched SweepParams from a config plus per-field overrides.
 
     Each override is a scalar (held constant) or a length-K sequence (the
-    sweep values); ``static_job_factors`` takes [J] or [K, J].  All length-K
-    overrides must agree on K; unswept fields are broadcast from the config.
+    sweep values); ``static_job_factors`` / ``job_active`` take [J] or
+    [K, J].  All length-K overrides must agree on K; unswept fields are
+    broadcast from the config.
     """
     base = sweep_of(cfg)
     lens = []
@@ -204,11 +223,10 @@ def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
         if name not in SweepParams._fields:
             raise ValueError(f"unknown sweep field {name!r}; "
                              f"choose from {SweepParams._fields}")
-        point_ndim = 1 if name == "static_job_factors" else 0
         a = np.asarray(v)
-        if a.ndim == point_ndim + 1:
+        if a.ndim == _POINT_NDIM.get(name, 0) + 1:
             lens.append(a.shape[0])
-        elif a.ndim != point_ndim:
+        elif a.ndim != _POINT_NDIM.get(name, 0):
             raise ValueError(f"sweep field {name!r} has shape {a.shape}")
     k = lens[0] if lens else 1
     if any(l != k for l in lens):
@@ -219,28 +237,81 @@ def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
         if v is None:
             out[name] = None
             continue
-        a = jnp.asarray(v, jnp.int32 if name == "seed" else jnp.float32)
-        point_ndim = 1 if name == "static_job_factors" else 0
-        if a.ndim == point_ndim:
+        a = jnp.asarray(v, _FIELD_DTYPE.get(name, jnp.float32))
+        if a.ndim == _POINT_NDIM.get(name, 0):
             a = jnp.broadcast_to(a[None], (k,) + a.shape)
         out[name] = a
     return SweepParams(**out)
 
 
-def grid_sweep(cfg: SimConfig, **axes) -> tuple[SweepParams, list[dict]]:
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """Self-describing label for one grid point of a sweep/plan.
+
+    ``axes`` maps axis name -> that point's value (the *label* the caller
+    enumerated — e.g. ``{"slope": 1.75, "seed": 2}`` or
+    ``{"variant": "WI", "n_jobs": 4}``); ``params`` is the resolved
+    unbatched SweepParams actually run, so results carry both the
+    human-facing coordinates and the exact dynamic values.  ``n_jobs`` is
+    the point's *active* job count on a padded fabric (None: all jobs).
+
+    Travels with its `SimResult` (``metrics.postprocess(..., point=...)``),
+    so aggregation never relies on positional alignment with a label list.
+    """
+
+    axes: dict
+    params: Optional[SweepParams] = None
+    n_jobs: Optional[int] = None
+
+    def __getitem__(self, name: str):
+        return self.axes[name]
+
+    def get(self, name: str, default=None):
+        return self.axes.get(name, default)
+
+    def matches(self, **axis_values) -> bool:
+        """True iff every given axis name exists and equals the value."""
+        for name, want in axis_values.items():
+            if name not in self.axes:
+                return False
+            have = self.axes[name]
+            if isinstance(have, np.ndarray) or isinstance(want, np.ndarray):
+                if not np.array_equal(np.asarray(have), np.asarray(want)):
+                    return False
+            elif have != want:
+                return False
+        return True
+
+    def label(self) -> str:
+        return ",".join(f"{k}={v}" for k, v in self.axes.items())
+
+
+def sweep_slice(sweep: SweepParams, i: int) -> SweepParams:
+    """The i-th unbatched point of a batched SweepParams."""
+    return jax.tree_util.tree_map(lambda x: x[i], sweep)
+
+
+def grid_sweep(cfg: SimConfig, **axes) -> tuple[SweepParams, list[SweepPoint]]:
     """Cartesian-product sweep over the given scalar axes.
 
-    Returns the batched SweepParams (K = product of axis lengths) plus, per
-    grid point, a dict of that point's axis values (for labeling results).
+    Returns the batched SweepParams (K = product of axis lengths) plus one
+    `SweepPoint` per grid point carrying that point's axis values *and* its
+    resolved params, so labels round-trip through
+    `metrics.postprocess_sweep(cfg, raw, points)` attached to each result
+    instead of relying on positional alignment.
     """
     names = list(axes)
     grids = np.meshgrid(*[np.asarray(axes[n], np.float64) for n in names],
                         indexing="ij")
     flat = {n: g.reshape(-1) for n, g in zip(names, grids)}
-    points = [{n: flat[n][i] for n in names}
-              for i in range(next(iter(flat.values())).shape[0])] \
-        if names else [{}]
-    return make_sweep(cfg, **flat), points
+    sweep = make_sweep(cfg, **flat)
+    n_jobs = cfg.jobs.n_jobs
+    k = sweep_len(sweep)
+    points = [SweepPoint(axes={n: flat[n][i].item() for n in names},
+                         params=sweep_slice(sweep, i), n_jobs=n_jobs)
+              for i in range(k)] if names else \
+        [SweepPoint(axes={}, params=sweep_slice(sweep, 0), n_jobs=n_jobs)]
+    return sweep, points
 
 
 def sweep_len(sweep: SweepParams) -> int:
@@ -373,6 +444,36 @@ def _init_state(cfg: SimConfig, statics: TickStatics,
 # One tick
 # ---------------------------------------------------------------------------
 
+def _mix32(x: Array) -> Array:
+    """murmur3's 32-bit finalizer — a cheap full-avalanche bijection."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _lane_uniform(key: Array, n: int) -> Array:
+    """Per-lane U[0,1) draws where lane i depends only on (key, i).
+
+    `jax.random.uniform(key, (n,))` has *no* prefix property — its counter
+    layout depends on n, so a padded fabric would draw different randomness
+    than an unpadded one.  Hashing (key, lane index) counter-style instead
+    makes the first n lanes of a padded run bit-identical to an unpadded
+    run, which is what lets the padded-jobs axis (`SweepParams.job_active`)
+    share one compile group across job counts without changing any
+    trajectory.  Two keyed murmur3 finalizer rounds stay ~10 ALU ops per
+    lane — a per-lane `jax.random.fold_in` costs a threefry hash each and
+    ~3x the whole engine's tick rate.
+    """
+    lanes = jnp.arange(n, dtype=jnp.uint32)
+    h = _mix32(lanes ^ key[0].astype(jnp.uint32))
+    h = _mix32(h ^ key[1].astype(jnp.uint32))
+    # top 24 bits -> [0, 1) at float32 resolution
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1 / (1 << 24))
+
+
 def _red_prob(sweep: SweepParams, q: Array) -> Array:
     """Gentle RED: 0 -> pmax on [qmin, qmax], pmax -> 1 on [qmax, 2*qmax]."""
     ramp1 = jnp.clip((q - sweep.red_qmin)
@@ -400,6 +501,10 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     # 1. Job phase machine: compute countdown -> comm-phase entry
     # ------------------------------------------------------------------
     started = t >= statics.start_offset
+    if sweep.job_active is not None:
+        # padded-jobs axis: masked-off jobs never start, so their flows
+        # stay inert (no injection, no iterations) for this sweep point
+        started = started & sweep.job_active
     t_rem = jnp.where(~st.in_comm & started, st.t_rem - dt, st.t_rem)
     compute_done = ~st.in_comm & started & (t_rem <= 0.0)
 
@@ -482,8 +587,8 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     # per-flow drop / mark signals
     dropped_f = dropped.sum(axis=0)                              # [N] bytes
     marked_f = marked.sum(axis=0)
-    loss_evt = jax.random.uniform(k_loss, (N,)) < -jnp.expm1(-dropped_f / mss)
-    cnp_evt = jax.random.uniform(k_cnp, (N,)) < -jnp.expm1(-marked_f / mss)
+    loss_evt = _lane_uniform(k_loss, N) < -jnp.expm1(-dropped_f / mss)
+    cnp_evt = _lane_uniform(k_cnp, N) < -jnp.expm1(-marked_f / mss)
     # dropped bytes must be retransmitted
     to_send = to_send + dropped_f
 
@@ -524,9 +629,8 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     iter_idx = st.iter_idx + iter_done.astype(jnp.int32)
     iter_start = jnp.where(iter_done, t, st.iter_start)
 
-    straggles = (jax.random.uniform(k_strag, (J,)) < statics.straggle_prob)
-    strag_amt = jax.random.uniform(k_samt, (J,), minval=0.05, maxval=0.10) \
-        * statics.iso_iter
+    straggles = _lane_uniform(k_strag, J) < statics.straggle_prob
+    strag_amt = (0.05 + 0.05 * _lane_uniform(k_samt, J)) * statics.iso_iter
     straggle_extra = jnp.where(iter_done,
                                jnp.where(straggles, strag_amt, 0.0),
                                st.straggle_extra)

@@ -1,0 +1,462 @@
+"""Declarative experiment plans — one sweep surface over every axis.
+
+The paper's evaluation is a matrix of sweeps: Fig. 10 varies job count x
+seed, Figs. 15-17 vary aggressiveness functions and protocol scalars, the
+baselines add scheme axes (OFF / WI / MD / Static / Cassini).  Some of those
+axes are *dynamic* (traced scalars the batched sweep engine already vmaps
+over — slope, intercept, g, gamma, RED thresholds, seeds, per-job factors,
+the `job_active` mask) and some are *static* (they shape the traced program
+— algorithm, variant, F family, topology, workload).  Before this module
+every benchmark hand-wired that split; now callers declare a `Plan`:
+
+    plan = Plan(
+        name="fig10-reno",
+        axes=(Axis("variant", ("OFF", "WI")),
+              Axis("n_jobs", (2, 3, 4, 5, 6, 7, 8)),
+              Axis("seed", (1, 2, 3))),
+        build=lambda pt: build_cfg_for(pt["variant"], pt["n_jobs"]),
+    )
+    result = run_plan(plan)
+    sweep_speedup_stats(result.select(variant="OFF", n_jobs=4),
+                        result.select(variant="WI", n_jobs=4))
+
+and `run_plan` does the partitioning (DESIGN.md §5):
+
+  1. enumerate the cartesian product of the axes (minus `where`-filtered
+     points) and build each point's `SimConfig`;
+  2. group points by *static signature* — the config with every dynamic
+     field canonicalized — so points that only differ dynamically share one
+     compile group;
+  3. merge groups that differ only in workload size: if a point's
+     (topology, jobs) equal the *restriction* of a larger point's to its
+     first n jobs, the smaller point runs on the larger fabric with a
+     `job_active` mask (the padded-jobs axis), joining its compile group;
+  4. lower each group's points onto the `simulate_sweep` K axis — one
+     trace, one compile, K simulations per group — optionally sharding K
+     across local devices;
+  5. post-process each point with its own (unpadded) config and attach a
+     `SweepPoint`, so every `SimResult` names its axis coordinates.
+
+A Fig. 10-style plan (7 job counts x 3 seeds x {OFF, WI}) thus compiles
+*two* programs (one per variant) instead of 14+.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim import metrics
+from repro.netsim.engine import (
+    SimConfig,
+    JobSpec,
+    SweepParams,
+    SweepPoint,
+    simulate_sweep,
+    sweep_of,
+)
+from repro.netsim.topology import Topology
+
+__all__ = ["Axis", "Plan", "PlanResult", "run_plan", "restrict_workload"]
+
+_DYNAMIC_FIELDS = frozenset(SweepParams._fields)
+
+
+# ---------------------------------------------------------------------------
+# Plan declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One named dimension of an experiment plan.
+
+    ``values`` are the labels enumerated into the cartesian product; every
+    point's full label dict is passed to `Plan.build`.
+
+    kind:
+      * "dynamic" — the axis targets a `SweepParams` field and rides the
+        batched sweep (no recompilation across its values);
+      * "static"  — the axis only shapes the config via `Plan.build`
+        (algorithm, variant, F family, workload, ...);
+      * "auto"    — dynamic iff the target field names a SweepParams field.
+
+    ``field`` overrides the targeted SweepParams field (default: the axis
+    name), and ``resolve`` maps a label to the field's actual value — e.g.
+    an axis named "solo" with values ("all", 0, 1) can resolve to
+    `job_active` masks while results stay selectable by the human label.
+    """
+
+    name: str
+    values: tuple
+    kind: str = "auto"
+    field: Optional[str] = None
+    resolve: Optional[Callable[[object], object]] = None
+
+    def __post_init__(self):
+        if self.kind not in ("auto", "dynamic", "static"):
+            raise ValueError(f"axis {self.name!r}: unknown kind {self.kind!r}")
+        if not len(self.values):
+            raise ValueError(f"axis {self.name!r} has no values")
+        object.__setattr__(self, "values", tuple(self.values))
+
+    @property
+    def target(self) -> str:
+        return self.field if self.field is not None else self.name
+
+    def is_dynamic(self) -> bool:
+        if self.kind == "auto":
+            return self.target in _DYNAMIC_FIELDS
+        return self.kind == "dynamic"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A declarative experiment: named axes x a config builder.
+
+    ``build`` receives one point's ``{axis name: value}`` dict and returns
+    that point's `SimConfig`.  It may ignore dynamic axes entirely —
+    `run_plan` threads their (resolved) values into the sweep afterwards —
+    but static axes (job count, scheme, F family, ...) must be reflected in
+    the returned config.  ``where`` optionally prunes points from the
+    cartesian product (e.g. baseline points that only need one slope).
+    """
+
+    axes: tuple[Axis, ...]
+    build: Callable[[dict], SimConfig]
+    name: str = ""
+    where: Optional[Callable[[dict], bool]] = None
+
+    def __post_init__(self):
+        names = [ax.name for ax in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"plan {self.name!r}: duplicate axis names {names}")
+
+    def points(self) -> list[dict]:
+        """The cartesian product of axis values (last axis fastest), minus
+        `where`-filtered points, as one label dict per point."""
+        pts = [{}]
+        for ax in self.axes:
+            pts = [{**p, ax.name: v} for p in pts for v in ax.values]
+        if self.where is not None:
+            pts = [p for p in pts if self.where(p)]
+        if not pts:
+            raise ValueError(f"plan {self.name!r} has no points")
+        return pts
+
+
+# ---------------------------------------------------------------------------
+# Workload restriction — the padded-jobs merge test
+# ---------------------------------------------------------------------------
+
+def restrict_workload(topo: Topology, jobs: JobSpec,
+                      n_jobs: int) -> tuple[Topology, JobSpec]:
+    """The sub-workload on the first ``n_jobs`` jobs of a fabric.
+
+    A smaller plan point may run on a larger point's fabric (with trailing
+    jobs masked off) exactly when its own (topo, jobs) equal this
+    restriction — same links, same flows for the kept jobs, same phase
+    programs.  Flows of kept jobs must form a prefix of the flow axis so
+    the lane-stable RNG draws identical randomness (see `_lane_uniform`).
+    """
+    keep = topo.flow_to_job < n_jobs
+    topo_r = Topology(cap=topo.cap, hops=topo.hops[keep],
+                      flow_to_job=topo.flow_to_job[keep], names=topo.names)
+    jobs_r = JobSpec(compute=jobs.compute[:n_jobs],
+                     comm_bytes=jobs.comm_bytes[:n_jobs],
+                     n_phases=jobs.n_phases[:n_jobs],
+                     start_offset=jobs.start_offset[:n_jobs],
+                     straggle_prob=jobs.straggle_prob[:n_jobs],
+                     iso_iter_time=jobs.iso_iter_time[:n_jobs])
+    return topo_r, jobs_r
+
+
+def _pad_cols(a: np.ndarray, width: int, fill) -> np.ndarray:
+    if a.shape[1] >= width:
+        return a
+    pad = np.full((a.shape[0], width - a.shape[1]), fill, a.dtype)
+    return np.concatenate([a, pad], axis=1)
+
+
+def _same_workload(ta: Topology, ja: JobSpec, tb: Topology, jb: JobSpec) -> bool:
+    """Value equality modulo behaviour-neutral padding (zero phase columns,
+    -1 hop columns)."""
+    if ta.names != tb.names or not np.array_equal(ta.cap, tb.cap):
+        return False
+    if not np.array_equal(ta.flow_to_job, tb.flow_to_job):
+        return False
+    h = max(ta.hops.shape[1], tb.hops.shape[1])
+    if not np.array_equal(_pad_cols(ta.hops, h, -1), _pad_cols(tb.hops, h, -1)):
+        return False
+    p = max(ja.compute.shape[1], jb.compute.shape[1])
+    return (np.array_equal(_pad_cols(ja.compute, p, 0.0),
+                           _pad_cols(jb.compute, p, 0.0))
+            and np.array_equal(_pad_cols(ja.comm_bytes, p, 0.0),
+                               _pad_cols(jb.comm_bytes, p, 0.0))
+            and np.array_equal(ja.n_phases, jb.n_phases)
+            and np.array_equal(ja.start_offset, jb.start_offset)
+            and np.array_equal(ja.straggle_prob, jb.straggle_prob)
+            and np.array_equal(ja.iso_iter_time, jb.iso_iter_time))
+
+
+def _flows_are_job_prefix(topo: Topology, n_jobs: int) -> bool:
+    """Flows of the first n_jobs jobs occupy the first flow lanes."""
+    keep = topo.flow_to_job < n_jobs
+    return bool(np.all(np.nonzero(keep)[0] == np.arange(int(keep.sum()))))
+
+
+# ---------------------------------------------------------------------------
+# Static signatures & compile groups
+# ---------------------------------------------------------------------------
+
+# Marker standing in for "Static-baseline factors present" in signatures:
+# the factor *values* are dynamic (they ride the sweep), but their presence
+# is structural (it changes the traced program).
+_FACTORS_PRESENT = np.asarray([1.0])
+
+
+def _canonical_cfg(cfg: SimConfig) -> SimConfig:
+    """The config with every dynamic field pinned to a canonical value.
+
+    Two points share a compile group iff their canonical configs are equal
+    (after workload merging); using the canonical config as the jit static
+    argument also means re-running a plan with different seeds or scalars
+    hits the exact same jit cache entry.
+    """
+    proto = dataclasses.replace(cfg.protocol, slope=0.0, intercept=0.0,
+                                g=0.0, gamma=0.0, init_comm_gap=0.0)
+    return dataclasses.replace(
+        cfg, protocol=proto, seed=0,
+        red_qmin=0.0, red_qmax=1.0, red_pmax=0.0,
+        static_job_factors=(None if cfg.static_job_factors is None
+                            else _FACTORS_PRESENT))
+
+
+def _no_workload(cfg: SimConfig) -> SimConfig:
+    return dataclasses.replace(cfg, topo=None, jobs=None)
+
+
+def _fabric_key(topo: Topology):
+    return (topo.names, topo.cap.tobytes())
+
+
+@dataclasses.dataclass
+class _Group:
+    """One compile group: a shared static config + its member points."""
+
+    cfg: SimConfig               # canonical static config (largest fabric)
+    idxs: list[int]              # plan-point indices, in plan order
+    masked: bool                 # True iff job_active masks are needed
+
+
+def _compile_groups(cfgs: list[SimConfig], pad_jobs: bool) -> list[_Group]:
+    canon = [_canonical_cfg(c) for c in cfgs]
+    # Bucket by everything except the workload; points whose workloads can't
+    # merge (Cassini schedules are [J]-shaped static arrays) stay exact.
+    buckets: dict = {}
+    for i, c in enumerate(canon):
+        if pad_jobs and c.cassini is None:
+            key = ("pad", _no_workload(c), _fabric_key(c.topo))
+        else:
+            key = ("exact", c)
+        buckets.setdefault(key, []).append(i)
+
+    groups: list[_Group] = []
+    for key, idxs in buckets.items():
+        if key[0] == "exact":
+            groups.append(_Group(cfg=canon[idxs[0]], idxs=idxs, masked=False))
+            continue
+        remaining = list(idxs)
+        while remaining:
+            ref = max(remaining,
+                      key=lambda i: (cfgs[i].jobs.n_jobs, cfgs[i].topo.n_flows))
+            ref_topo, ref_jobs = cfgs[ref].topo, cfgs[ref].jobs
+            members, rest = [], []
+            for i in remaining:
+                n = cfgs[i].jobs.n_jobs
+                if (n <= ref_jobs.n_jobs
+                        and _flows_are_job_prefix(ref_topo, n)
+                        and _same_workload(*restrict_workload(ref_topo,
+                                                              ref_jobs, n),
+                                           cfgs[i].topo, cfgs[i].jobs)):
+                    members.append(i)
+                else:
+                    rest.append(i)
+            masked = any(cfgs[i].jobs.n_jobs < ref_jobs.n_jobs
+                         for i in members)
+            groups.append(_Group(cfg=canon[ref], idxs=sorted(members),
+                                 masked=masked))
+            remaining = rest
+    # deterministic group order: by first member point
+    groups.sort(key=lambda g: g.idxs[0])
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Lowering a group onto the sweep axis
+# ---------------------------------------------------------------------------
+
+def _point_params(cfg: SimConfig, overrides: dict, group: _Group) -> SweepParams:
+    """Resolve one point's unbatched SweepParams on the group's fabric."""
+    from repro.netsim.engine import _FIELD_DTYPE  # single source of dtypes
+
+    params = sweep_of(cfg)
+    for field, value in overrides.items():
+        dtype = _FIELD_DTYPE.get(field, jnp.float32)
+        params = params._replace(**{field: jnp.asarray(value, dtype)})
+    j_ref = group.cfg.jobs.n_jobs
+    n = cfg.jobs.n_jobs
+    if params.static_job_factors is not None:
+        f = np.asarray(params.static_job_factors, np.float32)
+        if f.shape[0] < j_ref:     # pad with neutral factors for masked jobs
+            f = np.concatenate([f, np.ones((j_ref - f.shape[0],), np.float32)])
+        params = params._replace(static_job_factors=jnp.asarray(f))
+    if params.job_active is not None:
+        m = np.asarray(params.job_active, bool)
+        if m.shape[0] < j_ref:     # caller mask on the point's own fabric
+            m = np.concatenate([m, np.zeros((j_ref - m.shape[0],), bool)])
+        params = params._replace(job_active=jnp.asarray(m))
+    elif group.masked:
+        mask = np.zeros((j_ref,), bool)
+        mask[:n] = True
+        params = params._replace(job_active=jnp.asarray(mask))
+    return params
+
+
+def _stack_params(per_point: list[SweepParams]) -> SweepParams:
+    out = {}
+    for name in SweepParams._fields:
+        vals = [getattr(p, name) for p in per_point]
+        if all(v is None for v in vals):
+            out[name] = None
+        elif any(v is None for v in vals):
+            raise ValueError(f"sweep field {name!r} set on only some points "
+                             f"of one compile group")
+        else:
+            out[name] = jnp.stack([jnp.asarray(v) for v in vals])
+    return SweepParams(**out)
+
+
+def _shard_sweep(sweep: SweepParams, k: int,
+                 shard) -> tuple[SweepParams, int]:
+    """Optionally lay the K axis out across local devices.
+
+    Pads K up to a multiple of the device count (repeating the last point;
+    the surplus results are dropped after the run) and commits every leaf
+    to a NamedSharding over a 1-D device mesh, so the jitted sweep program
+    partitions the vmapped simulations across devices.  shard="auto" turns
+    this on whenever more than one local device exists; single-device runs
+    are returned untouched (identical jit cache keys to unsharded calls).
+    """
+    n_dev = jax.local_device_count()
+    if shard == "auto":
+        shard = n_dev > 1
+    if not shard or n_dev <= 1:
+        return sweep, k
+    pad = (-k) % n_dev
+    if pad:
+        sweep = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), sweep)
+    # local devices only: the pad above is computed from the local count,
+    # and the sweep pytree is host-local data
+    mesh = jax.sharding.Mesh(np.asarray(jax.local_devices()), ("k",))
+    ns = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("k"))
+    return jax.device_put(sweep, ns), k + pad
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanResult:
+    """All of a plan's results, each self-describing via its `SweepPoint`.
+
+    Results are in plan-point order (cartesian product, last axis fastest).
+    ``select`` filters by axis values *preserving that order*, so two
+    selections that differ only in a scheme axis stay seed-paired for
+    `sweep_speedup_stats`.
+    """
+
+    plan: Plan
+    results: list[metrics.SimResult]
+    n_compile_groups: int
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+    def select(self, **axis_values) -> list[metrics.SimResult]:
+        """Results whose SweepPoint matches every given axis=value."""
+        out = [r for r in self.results if r.point.matches(**axis_values)]
+        if not out:
+            raise KeyError(f"no plan point matches {axis_values} "
+                           f"(axes: {[a.name for a in self.plan.axes]})")
+        return out
+
+    def group_by(self, *names) -> dict[tuple, list[metrics.SimResult]]:
+        """Pivot results by the given axis names -> ordered result lists."""
+        out: dict[tuple, list[metrics.SimResult]] = {}
+        for r in self.results:
+            key = tuple(r.point[n] for n in names)
+            out.setdefault(key, []).append(r)
+        return out
+
+    @property
+    def n_ticks(self) -> int:
+        """Total simulator ticks executed (for µs/tick accounting)."""
+        return sum(r.cfg.n_ticks for r in self.results)
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
+    """Execute a plan: one `simulate_sweep` per compile group.
+
+    shard:    "auto" | True | False — lay each group's K axis across local
+              devices (see `_shard_sweep`).
+    pad_jobs: merge workload-size variants into one padded + masked compile
+              group where possible (disable to force exact grouping).
+    """
+    points = plan.points()
+    cfgs = [plan.build(dict(pt)) for pt in points]
+    dyn_axes = [ax for ax in plan.axes if ax.is_dynamic()]
+    for ax in dyn_axes:
+        if ax.target not in _DYNAMIC_FIELDS:
+            raise ValueError(f"axis {ax.name!r} is dynamic but targets "
+                             f"unknown sweep field {ax.target!r}")
+    overrides = []
+    for pt in points:
+        ov = {}
+        for ax in dyn_axes:
+            v = pt[ax.name]
+            ov[ax.target] = ax.resolve(v) if ax.resolve is not None else v
+        overrides.append(ov)
+
+    groups = _compile_groups(cfgs, pad_jobs)
+    results: list[Optional[metrics.SimResult]] = [None] * len(points)
+    for group in groups:
+        per_point = [_point_params(cfgs[i], overrides[i], group)
+                     for i in group.idxs]
+        sweep = _stack_params(per_point)
+        k = len(group.idxs)
+        sweep, _ = _shard_sweep(sweep, k, shard)
+        raw = simulate_sweep(group.cfg, sweep)
+        for slot, i in enumerate(group.idxs):
+            point = SweepPoint(axes=dict(points[i]), params=per_point[slot],
+                               n_jobs=cfgs[i].jobs.n_jobs)
+            raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s], raw)
+            results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
+                                             n_jobs=point.n_jobs)
+    return PlanResult(plan=plan, results=results,
+                      n_compile_groups=len(groups))

@@ -9,16 +9,23 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import numpy as np
 
-from repro.netsim.engine import RawSimOutput, SimConfig
+from repro.netsim.engine import RawSimOutput, SimConfig, SweepPoint
 
 
 @dataclasses.dataclass
 class SimResult:
-    """Post-processed, numpy-side view of one simulation."""
+    """Post-processed, numpy-side view of one simulation.
+
+    ``point`` (when the run came from a sweep or an experiment plan) names
+    the grid point this result belongs to — axis name -> value labels plus
+    the resolved `SweepParams` — so results are self-describing and can be
+    grouped/pivoted by axis name instead of positional bookkeeping.
+    """
 
     cfg: SimConfig
     iter_times: list[np.ndarray]      # per job, valid entries only
@@ -29,6 +36,7 @@ class SimResult:
     trace_incomm: np.ndarray          # [C, J]
     trace_drops: np.ndarray           # [C]
     trace_jobtput: np.ndarray         # [C, J] delivered bytes/s per job
+    point: Optional[SweepPoint] = None
 
     @property
     def n_jobs(self) -> int:
@@ -47,10 +55,20 @@ class SimResult:
         return np.concatenate(xs) if xs else np.asarray([])
 
 
-def postprocess(cfg: SimConfig, raw: RawSimOutput) -> SimResult:
+def postprocess(cfg: SimConfig, raw: RawSimOutput,
+                point: Optional[SweepPoint] = None,
+                n_jobs: Optional[int] = None) -> SimResult:
+    """Numpy-side view of one raw simulation.
+
+    ``point`` attaches the sweep/plan coordinates; ``n_jobs`` trims the
+    job-indexed outputs to the first n jobs — the active jobs of a run on a
+    padded fabric (`SweepParams.job_active`), whose masked-off trailing jobs
+    record no iterations and carry no traffic.
+    """
     it = np.asarray(raw.iter_times)
     counts = np.asarray(raw.iter_counts)
-    per_job = [it[j, : int(min(counts[j], it.shape[1]))] for j in range(it.shape[0])]
+    n = it.shape[0] if n_jobs is None else min(n_jobs, it.shape[0])
+    per_job = [it[j, : int(min(counts[j], it.shape[1]))] for j in range(n)]
     per_job = [x[~np.isnan(x)] for x in per_job]
     sim_t = float(np.asarray(raw.trace_t)[-1]) if raw.trace_t.size else cfg.sim_time
     return SimResult(
@@ -60,17 +78,29 @@ def postprocess(cfg: SimConfig, raw: RawSimOutput) -> SimResult:
         marks_per_s=float(np.asarray(raw.trace_marks).sum() / max(sim_t, 1e-9)),
         trace_t=np.asarray(raw.trace_t),
         trace_util=np.asarray(raw.trace_util),
-        trace_incomm=np.asarray(raw.trace_incomm),
+        trace_incomm=np.asarray(raw.trace_incomm)[:, :n],
         trace_drops=np.asarray(raw.trace_drops),
-        trace_jobtput=np.asarray(raw.trace_jobtput),
+        trace_jobtput=np.asarray(raw.trace_jobtput)[:, :n],
+        point=point,
     )
 
 
-def postprocess_sweep(cfg: SimConfig, raw: RawSimOutput) -> list[SimResult]:
+def postprocess_sweep(cfg: SimConfig, raw: RawSimOutput,
+                      points: Optional[list[SweepPoint]] = None
+                      ) -> list[SimResult]:
     """Post-process a `simulate_sweep` output (leading [K] sweep axis) into
-    one SimResult per grid point, in sweep order."""
+    one SimResult per grid point, in sweep order.
+
+    Pass the `SweepPoint` list from `grid_sweep` (or hand-built labels) and
+    each result carries its own point — downstream grouping then selects by
+    axis value instead of relying on positional alignment.
+    """
     k = int(np.asarray(raw.iter_counts).shape[0])
-    return [postprocess(cfg, jax.tree_util.tree_map(lambda x, i=i: x[i], raw))
+    if points is not None and len(points) != k:
+        raise ValueError(f"{len(points)} points for a K={k} sweep")
+    return [postprocess(cfg, jax.tree_util.tree_map(lambda x, i=i: x[i], raw),
+                        point=None if points is None else points[i],
+                        n_jobs=None if points is None else points[i].n_jobs)
             for i in range(k)]
 
 

@@ -1,0 +1,257 @@
+"""Experiment-plan API (`netsim.experiment`) — correctness invariants.
+
+The contract: a plan's cartesian product partitions into compile groups
+(one trace per distinct static signature), job-count grids merge into one
+padded + masked group whose active lanes match unpadded runs exactly, and
+every result is self-describing via its `SweepPoint`.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.netsim import engine, experiment
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+DT = 2e-5
+
+
+def _proto(algo=Algo.RENO, variant=Variant.WI, **kw):
+    return MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant),
+                                   tick_dt=DT, rtt=100e-6),
+                       slope=1.75, intercept=0.25, **kw)
+
+
+def _cfg(n_jobs=2, sim_time=0.4, seed=3, **kw):
+    topo = netsim.dumbbell(n_jobs, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.0075] * n_jobs, [25e6] * n_jobs)
+    return netsim.SimConfig(topo=topo, jobs=jobs,
+                            protocol=kw.pop("protocol", _proto()),
+                            sim_time=sim_time, dt=DT, seed=seed, **kw)
+
+
+def _jobs_plan(variants=("WI",), job_counts=(2, 3, 4), seeds=(3,),
+               sim_time=0.4, name="jobs-plan"):
+    def build(pt):
+        variant = {"OFF": Variant.OFF, "WI": Variant.WI}[pt["variant"]]
+        return _cfg(n_jobs=pt["n_jobs"], sim_time=sim_time,
+                    protocol=_proto(variant=variant))
+    return netsim.Plan(
+        name=name, build=build,
+        axes=(netsim.Axis("variant", tuple(variants)),
+              netsim.Axis("n_jobs", tuple(job_counts)),
+              netsim.Axis("seed", tuple(seeds))))
+
+
+# ---------------------------------------------------------------------------
+# Padded / masked jobs axis
+# ---------------------------------------------------------------------------
+
+def test_padded_job_axis_matches_unpadded_runs():
+    """A plan over n_jobs in {2,3,4} must match three unpadded `simulate()`
+    runs on iteration times (tight tolerance)."""
+    counts = (2, 3, 4)
+    pr = netsim.run_plan(_jobs_plan(job_counts=counts), shard=False)
+    assert pr.n_compile_groups == 1
+    for n in counts:
+        (res,) = pr.select(n_jobs=n)
+        assert res.n_jobs == n            # padded jobs trimmed away
+        cfg = _cfg(n_jobs=n)
+        seq = netsim.postprocess(cfg, netsim.simulate(cfg))
+        assert len(seq.iter_times) == n
+        for j in range(n):
+            assert res.iter_times[j].shape == seq.iter_times[j].shape
+            np.testing.assert_allclose(res.iter_times[j], seq.iter_times[j],
+                                       rtol=1e-5, atol=1e-7)
+
+
+def test_padded_group_compiles_once():
+    """The whole job-count grid is one trace of one compile group."""
+    before = engine.TRACE_COUNT
+    pr = netsim.run_plan(_jobs_plan(job_counts=(2, 3, 4), sim_time=0.1,
+                                    name="trace-once"), shard=False)
+    assert pr.n_compile_groups == 1
+    assert engine.TRACE_COUNT == before + 1
+
+
+def test_fig10_style_plan_two_compile_groups():
+    """Acceptance: job count 2..8 x 3 seeds x {MLTCP, OFF} runs in <= 2
+    compile groups (one per variant) instead of >= 14 compiles."""
+    before = engine.TRACE_COUNT
+    pr = netsim.run_plan(_jobs_plan(variants=("OFF", "WI"),
+                                    job_counts=(2, 3, 4, 5, 6, 7, 8),
+                                    seeds=(1, 2, 3), sim_time=0.3,
+                                    name="fig10-accept"), shard=False)
+    assert len(pr) == 2 * 7 * 3
+    assert pr.n_compile_groups <= 2
+    assert engine.TRACE_COUNT - before <= 2
+    # every result is self-describing
+    for res in pr:
+        assert res.point is not None
+        assert set(res.point.axes) == {"variant", "n_jobs", "seed"}
+        assert res.n_jobs == res.point["n_jobs"]
+        assert res.point.params.job_active is not None
+    # seed-paired selections feed the error-bar aggregation directly
+    sp = netsim.sweep_speedup_stats(pr.select(variant="OFF", n_jobs=5),
+                                    pr.select(variant="WI", n_jobs=5))
+    assert sp["n_points"] == 3
+
+
+def test_pad_jobs_off_forces_exact_groups():
+    pr = netsim.run_plan(_jobs_plan(job_counts=(2, 3), sim_time=0.1,
+                                    name="no-pad"),
+                         shard=False, pad_jobs=False)
+    assert pr.n_compile_groups == 2
+
+
+def test_mismatched_workloads_do_not_merge():
+    """Points whose jobs are not a restriction of the largest fabric keep
+    their own compile group (different per-job programs)."""
+    def build(pt):
+        n = pt["n_jobs"]
+        compute = [0.0075] * n if n == 3 else [0.009] * n   # different jobs
+        topo = netsim.dumbbell(n, sockets_per_job=2)
+        jobs = netsim.JobSpec.simple(compute, [25e6] * n)
+        return netsim.SimConfig(topo=topo, jobs=jobs, protocol=_proto(),
+                                sim_time=0.1, dt=DT, seed=0)
+    pr = netsim.run_plan(netsim.Plan(
+        name="mismatch", build=build,
+        axes=(netsim.Axis("n_jobs", (2, 3)),)), shard=False)
+    assert pr.n_compile_groups == 2
+
+
+# ---------------------------------------------------------------------------
+# Axes: dynamic vs static, resolve, where
+# ---------------------------------------------------------------------------
+
+def test_dynamic_axes_share_one_group_static_axes_split():
+    cfg = _cfg(sim_time=0.1)
+    before = engine.TRACE_COUNT
+    pr = netsim.run_plan(netsim.Plan(
+        name="axes", build=lambda pt: dataclasses.replace(
+            cfg, protocol=dataclasses.replace(cfg.protocol,
+                                              f_spec=pt["f_spec"])),
+        axes=(netsim.Axis("f_spec", ("F1", "F5")),       # static: 2 groups
+              netsim.Axis("slope", (0.5, 1.75)),         # dynamic
+              netsim.Axis("seed", (0, 1)))), shard=False)
+    assert pr.n_compile_groups == 2
+    assert engine.TRACE_COUNT == before + 2
+    assert len(pr.select(f_spec="F1")) == 4
+    # the dynamic value actually reached the sweep
+    (res,) = pr.select(f_spec="F1", slope=0.5, seed=1)
+    assert float(res.point.params.slope) == 0.5
+    assert int(res.point.params.seed) == 1
+
+
+def test_axis_resolve_maps_labels_to_masks():
+    """A label axis can resolve to job_active masks (isolation runs) and
+    stay selectable by label."""
+    def solo_mask(v):
+        if v == "all":
+            return np.ones((2,), bool)
+        m = np.zeros((2,), bool)
+        m[v] = True
+        return m
+    pr = netsim.run_plan(netsim.Plan(
+        name="solo", build=lambda pt: _cfg(sim_time=0.4),
+        axes=(netsim.Axis("solo", ("all", 0, 1), field="job_active",
+                          resolve=solo_mask),)), shard=False)
+    assert pr.n_compile_groups == 1
+    (alone,) = pr.select(solo=0)
+    assert len(alone.iter_times[0]) > 0
+    assert len(alone.iter_times[1]) == 0       # masked job never ran
+    (both,) = pr.select(solo="all")
+    assert all(len(x) > 0 for x in both.iter_times)
+    # isolation is at least as fast as sharing the link
+    assert alone.avg_iter(0) <= both.avg_iter(0) * 1.01
+
+
+def test_where_prunes_points():
+    pr = netsim.run_plan(netsim.Plan(
+        name="where", build=lambda pt: _cfg(sim_time=0.1),
+        axes=(netsim.Axis("a", (0, 1)), netsim.Axis("seed", (0, 1))),
+        where=lambda pt: not (pt["a"] == 1 and pt["seed"] == 1)),
+        shard=False)
+    assert len(pr) == 3
+    with pytest.raises(KeyError):
+        pr.select(a=1, seed=1)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="duplicate axis"):
+        netsim.Plan(name="dup", build=lambda pt: _cfg(),
+                    axes=(netsim.Axis("a", (1,)), netsim.Axis("a", (2,))))
+    with pytest.raises(ValueError, match="no values"):
+        netsim.Axis("empty", ())
+    with pytest.raises(ValueError, match="unknown kind"):
+        netsim.Axis("a", (1,), kind="bogus")
+    with pytest.raises(ValueError, match="unknown sweep field"):
+        netsim.run_plan(netsim.Plan(
+            name="bad-field", build=lambda pt: _cfg(sim_time=0.1),
+            axes=(netsim.Axis("a", (1,), kind="dynamic"),)), shard=False)
+
+
+# ---------------------------------------------------------------------------
+# Self-describing results / SweepPoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_grid_sweep_points_roundtrip_through_postprocess():
+    """grid_sweep labels travel attached to results, not positionally."""
+    cfg = _cfg(sim_time=0.3)
+    slopes = [0.5, 1.75]
+    sweep, points = netsim.grid_sweep(cfg, slope=slopes, seed=[0, 1])
+    assert all(isinstance(p, netsim.SweepPoint) for p in points)
+    results = netsim.postprocess_sweep(cfg, netsim.simulate_sweep(cfg, sweep),
+                                       points)
+    for res in results:
+        assert res.point is not None
+        # the label matches the params that actually ran
+        assert float(res.point.params.slope) == res.point["slope"]
+        assert int(res.point.params.seed) == res.point["seed"]
+    assert sorted({r.point["slope"] for r in results}) == slopes
+    with pytest.raises(ValueError, match="points for a K="):
+        netsim.postprocess_sweep(cfg, netsim.simulate_sweep(cfg, sweep),
+                                 points[:1])
+
+
+def test_sweep_point_matches_and_group_by():
+    pr = netsim.run_plan(_jobs_plan(job_counts=(2, 3), seeds=(0, 1),
+                                    sim_time=0.1, name="pivot"), shard=False)
+    assert pr[0].point.matches(variant="WI")
+    assert not pr[0].point.matches(variant="OFF")
+    assert not pr[0].point.matches(bogus=1)
+    by_n = pr.group_by("n_jobs")
+    assert set(by_n) == {(2,), (3,)}
+    assert all(len(v) == 2 for v in by_n.values())
+    assert pr.n_ticks == sum(r.cfg.n_ticks for r in pr)
+
+
+def test_restrict_workload_roundtrip():
+    cfg4 = _cfg(n_jobs=4)
+    cfg2 = _cfg(n_jobs=2)
+    topo_r, jobs_r = netsim.restrict_workload(cfg4.topo, cfg4.jobs, 2)
+    assert experiment._same_workload(topo_r, jobs_r, cfg2.topo, cfg2.jobs)
+    assert not experiment._same_workload(topo_r, jobs_r,
+                                         cfg4.topo, cfg4.jobs)
+
+
+# ---------------------------------------------------------------------------
+# Sharding
+# ---------------------------------------------------------------------------
+
+def test_shard_auto_is_safe_on_any_device_count():
+    """shard="auto" partitions K when devices exist and is a no-op
+    otherwise; results are identical either way."""
+    pr_on = netsim.run_plan(_jobs_plan(job_counts=(2, 3), seeds=(0, 1, 2),
+                                       sim_time=0.1, name="shard-on"),
+                            shard=True)
+    pr_off = netsim.run_plan(_jobs_plan(job_counts=(2, 3), seeds=(0, 1, 2),
+                                        sim_time=0.1, name="shard-off"),
+                             shard=False)
+    assert len(pr_on) == len(pr_off)
+    for a, b in zip(pr_on, pr_off):
+        assert a.point.axes == b.point.axes
+        np.testing.assert_allclose(np.concatenate(a.iter_times + [[0.0]]),
+                                   np.concatenate(b.iter_times + [[0.0]]),
+                                   rtol=1e-5, atol=1e-7)
