@@ -16,6 +16,7 @@ validated by tests/test_netsim.py::test_scale_invariance). Full-scale runs:
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 
@@ -115,6 +116,35 @@ def sim(topo, profiles, proto, **kw) -> netsim.SimResult:
     pr = run_plan(plan(lambda pt: build_cfg(topo, profiles, proto, **kw),
                        name="single"))
     return pr.results[0]
+
+
+RESULTS_PATH = os.path.join("results", "benchmarks.json")
+
+
+def merge_results(new: dict, path: str = RESULTS_PATH) -> dict:
+    """Merge suite results into the benchmarks JSON, keyed by suite name.
+
+    Load-if-exists, update, dump — a partial run (one suite, a new suite)
+    updates only its own keys instead of destroying the perf trajectory the
+    other suites recorded on earlier runs.  The dump goes through a temp
+    file + os.replace so a crash mid-write can never leave a truncated
+    file that a later run would "recover" from as empty.  Returns the
+    merged dict.
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}          # corrupt/unreadable: rewrite from this run
+    data.update(new)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+    return data
 
 
 @dataclasses.dataclass

@@ -1,8 +1,10 @@
 """Benchmark harness — one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time per
-simulator tick across the benchmark's simulations) and writes the full
-derived metrics to results/benchmarks.json.
+simulator tick across the benchmark's simulations) and *merges* the full
+derived metrics into results/benchmarks.json keyed by suite name (existing
+suites' entries from earlier runs survive — the perf trajectory is append/
+update, never overwrite-all).
 
 Each suite returns ``(derived_metrics, n_ticks)`` where n_ticks is summed
 from the actual configs it ran (`PlanResult.n_ticks`) — not a hand-kept
@@ -14,14 +16,12 @@ REPRO_FULL=1 for paper-scale runs.
 """
 from __future__ import annotations
 
-import json
-import os
-
 from benchmarks import (
     circular,
     common,
     convergence,
     diversity,
+    kernel_sweep,
     parameters,
     partial_compat,
     speedup_vs_jobs,
@@ -40,18 +40,17 @@ def main() -> None:
         ("fig15_agg_functions", parameters.fig15_agg_functions),
         ("fig16_slope_intercept", parameters.fig16_heatmap),
         ("fig17_wi_vs_md", parameters.fig17_wi_vs_md),
+        ("kernel_sweep", kernel_sweep.run),
     ]
-    all_results = {}
-    lines = []
+    done = 0
     for name, fn in suites:
         r = common.timed(name, fn)
-        all_results[name] = r.derived
-        lines.append(r.csv_line())
+        # merge as each suite finishes: a crash in a later suite must not
+        # discard the hours the earlier ones already spent
+        common.merge_results({name: r.derived})
+        done += 1
         print(r.csv_line(), flush=True)
-    os.makedirs("results", exist_ok=True)
-    with open("results/benchmarks.json", "w") as f:
-        json.dump(all_results, f, indent=1)
-    print("# wrote results/benchmarks.json")
+    print(f"# merged {done} suites into {common.RESULTS_PATH}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,9 @@ Array = jnp.ndarray
 
 def _cubic_target(params: CCParams, w_max: Array, t: Array) -> Array:
     c = params.cubic_c * params.cubic_scale
-    k = jnp.cbrt(w_max * (1.0 - params.cubic_beta) / c)
+    # (1-beta)/c folds to one python-float constant (no constant-divisor
+    # division in the graph — keeps kernel/oracle programs bit-identical)
+    k = jnp.cbrt(w_max * ((1.0 - params.cubic_beta) / c))
     return c * (t - k) ** 3 + w_max
 
 

@@ -112,4 +112,7 @@ def send_rate(params: CCParams, state: FlowCCState) -> Array:
     """Instantaneous send rate in bytes/s implied by the CC state."""
     if params.algo == Algo.DCQCN:
         return state.rate_cur
-    return state.cwnd * params.mss / params.rtt
+    # mss/rtt folds to one python-float constant: a constant-divisor
+    # division would invite XLA's per-program reciprocal rewrite and
+    # 1-ulp drift between the fused-kernel and oracle programs
+    return state.cwnd * (params.mss / params.rtt)

@@ -26,9 +26,61 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 Array = jnp.ndarray
+
+# jax 0.4.x ships lax.optimization_barrier without a vmap batching rule;
+# the rule is trivial (barrier each batched operand, keep the batch dims) and
+# upstream in newer releases.  Registered here because `ack_bytes` below must
+# work inside the vmapped sweep engine.  The private-module import is
+# guarded: on a jax whose internal layout moved, the rule is upstream
+# anyway and registration is simply skipped.
+try:
+    from jax._src.lax import lax as _lax_internal
+    from jax.interpreters import batching as _batching
+    _barrier_p = getattr(_lax_internal, "optimization_barrier_p", None)
+except ImportError:                                    # pragma: no cover
+    _barrier_p = None
+if _barrier_p is not None and _barrier_p not in _batching.primitive_batchers:
+    def _barrier_batcher(batched_args, batch_dims, **params):
+        return _barrier_p.bind(*batched_args, **params), batch_dims
+    _batching.primitive_batchers[_barrier_p] = _barrier_batcher
+
+
+def ack_bytes(num_acks: Array, mtu) -> Array:
+    """``num_acks * mtu`` — the bytes acked this tick — as a materialized
+    product.
+
+    The optimization barrier stops XLA from contracting the product into a
+    neighbouring add (FMA).  XLA makes that choice *per program*, so without
+    the barrier the fused-kernel program and the jnp-oracle program can
+    round the same byte counter 1 ulp apart on some tick and drift
+    irrecoverably over a simulation.  Single source of truth for every
+    Algorithm 1 byte increment: `update_mltcp_params`, the job aggregation
+    in `core.cc_tick`, and the fused-kernel wrapper (which passes it to the
+    kernel as the precomputed ``ack_bytes`` operand); bit-equality of
+    kernel and oracle sweeps is pinned by tests/test_sweep.py.
+    """
+    return jax.lax.optimization_barrier(num_acks * mtu)
+
+
+def byte_ratio(numer: Array, total_bytes: Array) -> Array:
+    """Algorithm 1 line 20: ``min(1, bytes_sent / total_bytes)``.
+
+    Written as reciprocal-then-multiply deliberately: a literal division
+    whose divisor is a trace-time constant (total_bytes usually is) invites
+    XLA's divide-by-constant → multiply-by-reciprocal rewrite, and XLA
+    makes that choice *per program* — the fused-kernel program and the
+    jnp-oracle program could round the same tick 1 ulp apart and drift
+    irrecoverably over a simulation.  An explicit reciprocal multiply is
+    rewrite-proof (a multiply has no cheaper form), so both programs round
+    identically.  The single source of truth for the ratio: used by
+    ``update_mltcp_params`` below and inside the fused kernel body
+    (`repro.kernels.mltcp_step`), pinned bit-equal by tests/test_sweep.py.
+    """
+    return jnp.minimum(1.0, numer * (1.0 / jnp.maximum(total_bytes, 1.0)))
 
 
 class IterDetectParams(NamedTuple):
@@ -95,7 +147,7 @@ def update_mltcp_params(state: IterDetectState, params: IterDetectParams,
     """
     has_ack = num_acks > 0
 
-    bytes_sent = state.bytes_sent + num_acks * params.mtu          # line 12
+    bytes_sent = state.bytes_sent + ack_bytes(num_acks, params.mtu)  # line 12
     curr_gap = now - state.prev_ack_tstamp                         # line 14
     max_gap = jnp.maximum(state.max_gap, curr_gap)                 # line 15
 
@@ -105,7 +157,7 @@ def update_mltcp_params(state: IterDetectState, params: IterDetectParams,
     iter_gap_upd = (1.0 - params.gamma) * state.iter_gap + params.gamma * max_gap
 
     numer = job_bytes_sent if job_bytes_sent is not None else bytes_sent
-    ratio_mid = jnp.minimum(1.0, numer / jnp.maximum(params.total_bytes, 1.0))
+    ratio_mid = byte_ratio(numer, params.total_bytes)
 
     return IterDetectState(
         # lines 21-22 (reset) vs line 12 (accumulate)

@@ -165,7 +165,8 @@ def cc_tick(cfg: MLTCPConfig,
     # --- Algorithm 1: update bytes_sent / bytes_ratio / boundary detection ---
     job_bytes = None
     if cfg.aggregate_by_job and flow_to_job is not None and n_jobs > 0:
-        per_flow_bytes = state.det.bytes_sent + fb.num_acks * cfg.cc.mss
+        per_flow_bytes = state.det.bytes_sent + iteration.ack_bytes(
+            fb.num_acks, cfg.cc.mss)
         job_tot = jnp.zeros((n_jobs,), per_flow_bytes.dtype
                             ).at[flow_to_job].add(per_flow_bytes)
         job_bytes = job_tot[flow_to_job]

@@ -11,10 +11,20 @@ arrays through HBM per tick, while the fused kernel reads each once.
 Flow state is reshaped to [rows, 128] lanes (TPU vector width); every op is
 elementwise, so blocks tile (8, 128) and the grid parallelizes over rows.
 Algorithm and MLTCP variant are *static* (one fabric runs one CC), so the
-kernel specializes at trace time with zero runtime branching.
+kernel specializes at trace time with zero runtime branching — but the
+protocol *scalars* (DYN_FIELDS: F's slope/intercept, Algorithm 1's
+g/gamma/INIT_COMM_GAP) arrive as an f32[NDYN] SMEM operand, and the
+Static-baseline per-flow factors as an optional [R, 128] lanes operand, so
+traced sweep values (`simulate_sweep`'s vmapped K axis) keep the kernel
+fused instead of forcing a retrace or an oracle fallback (DESIGN.md §4).
+The SMEM ref is a plain operand rather than a `PrefetchScalarGridSpec`
+scalar-prefetch argument deliberately: the pallas batching rule lowers a
+*batched* prefetch operand to a serial `lax.scan` over the batch, which
+would run a K-point sweep one simulation at a time.
 
 Oracle: repro.core.cc_tick (via ref.py) — the exact module the netsim
-engine uses — fuzz-tested field-by-field in tests/test_kernels.py.
+engine uses — fuzz-tested field-by-field (including under traced
+DynamicParams and vmapped sweeps) in tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -23,7 +33,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import iteration
 from repro.core.cc.types import Algo, Variant
 
 LANES = 128
@@ -34,17 +46,27 @@ CC_FIELDS = ("cwnd", "ssthresh", "cooldown", "w_max", "epoch_start",
              "rate_cur", "rate_target", "alpha", "t_last_cnp", "t_last_inc",
              "t_last_alpha")
 IN_ORDER = (list(DET_FIELDS) + list(CC_FIELDS)
-            + ["stage", "prev_ratio", "num_acks", "loss", "cnp", "now",
-               "total_bytes", "job_numer"])
+            + ["stage", "prev_ratio", "num_acks", "ack_bytes", "loss", "cnp",
+               "now", "total_bytes", "job_numer"])
 OUT_ORDER = list(DET_FIELDS) + list(CC_FIELDS) + ["stage", "ratio", "rate"]
 
+# Layout of the dyn SMEM operand (== core.DynamicParams field order).
+DYN_FIELDS = ("slope", "intercept", "g", "gamma", "init_comm_gap")
+NDYN = len(DYN_FIELDS)
 
-def _kernel(p, *refs):
+
+def _kernel(p, dyn_ref, *refs):
+    # protocol scalars, read from SMEM (operand-carried — possibly traced
+    # sweep values; see module docstring)
+    slope, intercept = dyn_ref[0], dyn_ref[1]
+    g, gamma, init_comm_gap = dyn_ref[2], dyn_ref[3], dyn_ref[4]
+    if p["use_static_factors"]:
+        factors_r, refs = refs[0], refs[1:]
     n_in = len(IN_ORDER)
     (bytes_sent_r, prev_ack_r, iter_gap_r, max_gap_r,
      cwnd_r, ssthresh_r, cooldown_r, w_max_r, epoch_r,
      rate_cur_r, rate_tgt_r, alpha_r, t_cnp_r, t_inc_r, t_alpha_r,
-     stage_r, prev_ratio_r, acks_r, loss_r, cnp_r, now_r, tb_r,
+     stage_r, prev_ratio_r, acks_r, ackb_r, loss_r, cnp_r, now_r, tb_r,
      jobnum_r) = refs[:n_in]
     (o_bytes_sent, o_prev_ack, o_iter_gap, o_max_gap,
      o_cwnd, o_ssthresh, o_cooldown, o_w_max, o_epoch,
@@ -56,13 +78,15 @@ def _kernel(p, *refs):
     has_ack = acks > 0.0
 
     # ---------------- Algorithm 1 (core.iteration semantics) --------------
-    bytes_sent = bytes_sent_r[...] + acks * p["mss"]
+    # acked bytes arrive pre-multiplied (iteration.ack_bytes operand) so the
+    # product's rounding is pinned outside the kernel (bit-stable vs oracle)
+    bytes_sent = bytes_sent_r[...] + ackb_r[...]
     curr_gap = now - prev_ack_r[...]
     max_gap = jnp.maximum(max_gap_r[...], curr_gap)
-    new_iter = curr_gap > p["g"] * iter_gap_r[...]
-    iter_gap_upd = (1.0 - p["gamma"]) * iter_gap_r[...] + p["gamma"] * max_gap
+    new_iter = curr_gap > g * iter_gap_r[...]
+    iter_gap_upd = (1.0 - gamma) * iter_gap_r[...] + gamma * max_gap
     numer = jobnum_r[...] if p["aggregate"] else bytes_sent
-    ratio_mid = jnp.minimum(1.0, numer / jnp.maximum(tb_r[...], 1.0))
+    ratio_mid = iteration.byte_ratio(numer, tb_r[...])
 
     boundary = has_ack & new_iter
     o_bytes_sent[...] = jnp.where(boundary, 0.0,
@@ -73,14 +97,17 @@ def _kernel(p, *refs):
     o_ratio[...] = ratio
     o_prev_ack[...] = jnp.where(has_ack, now, prev_ack_r[...])
     o_iter_gap[...] = jnp.where(boundary, iter_gap_upd, iter_gap_r[...])
-    o_max_gap[...] = jnp.where(boundary, p["init_comm_gap"],
+    o_max_gap[...] = jnp.where(boundary,
+                               jnp.broadcast_to(init_comm_gap, max_gap.shape),
                                jnp.where(has_ack, max_gap, max_gap_r[...]))
 
     # ---------------- F(bytes_ratio), variant routing ----------------
-    if p["variant"] == int(Variant.OFF):
+    if p["use_static_factors"]:
+        f_vals = factors_r[...]          # Static [67]: constants replace F
+    elif p["variant"] == int(Variant.OFF):
         f_vals = jnp.ones_like(ratio)
     else:
-        f_vals = p["slope"] * ratio + p["intercept"]
+        f_vals = slope * ratio + intercept
     one = jnp.ones_like(f_vals)
     f_wi = f_vals if p["variant"] in (int(Variant.WI), int(Variant.BOTH)) \
         else one
@@ -100,7 +127,8 @@ def _kernel(p, *refs):
         else:
             c = p["cubic_c"] * p["cubic_scale"]
             tt = jnp.maximum(now - epoch_r[...], 0.0)
-            kk = jnp.cbrt(w_max_r[...] * (1.0 - p["cubic_beta"]) / c)
+            # (1-beta)/c is a python-float constant, as in core.cc.cubic
+            kk = jnp.cbrt(w_max_r[...] * ((1.0 - p["cubic_beta"]) / c))
             target = c * (f_wi * tt - kk) ** 3 + w_max_r[...]     # Eq. 9
             grow = acks * jnp.maximum(target - cwnd, 0.0) \
                 / jnp.maximum(cwnd, 1e-6)
@@ -129,7 +157,7 @@ def _kernel(p, *refs):
         o_t_inc[...] = t_inc_r[...]
         o_t_alpha[...] = t_alpha_r[...]
         o_stage[...] = stage_r[...]
-        o_rate[...] = o_cwnd[...] * p["mss"] / p["rtt"]
+        o_rate[...] = o_cwnd[...] * (p["mss"] / p["rtt"])  # == core send_rate
     else:  # ---------------- DCQCN ----------------
         cnp = cnp_sig & ((now - t_cnp_r[...]) >= p["cnp_interval"])
         alpha_on_cnp = (1.0 - p["dcqcn_g"]) * alpha_r[...] + p["dcqcn_g"]
@@ -168,22 +196,37 @@ def _kernel(p, *refs):
         o_rate[...] = o_rate_cur[...]
 
 
-def mltcp_tick_arrays(cfg_static: dict, arrays: dict, *,
+def mltcp_tick_arrays(cfg_static: dict, dyn: jnp.ndarray, arrays: dict, *,
+                      static_factors: jnp.ndarray | None = None,
                       interpret: bool = True) -> dict:
-    """Run the fused tick. ``arrays``: {field: [R, 128]} per IN_ORDER
-    ("stage" int32, rest f32). Returns {field: [R, 128]} per OUT_ORDER."""
+    """Run the fused tick.
+
+    ``dyn``: f32[NDYN] protocol scalars per DYN_FIELDS, carried as an SMEM
+    operand (values may be traced — a sweep point — without retracing the
+    kernel).  ``arrays``: {field: [R, 128]} per IN_ORDER ("stage" int32,
+    rest f32); ``static_factors``: optional [R, 128] per-flow Static [67]
+    factors (their *presence* is static, the values are an operand).
+    Returns {field: [R, 128]} per OUT_ORDER.
+    """
     r = arrays["cwnd"].shape[0]
-    ins = [arrays[k] for k in IN_ORDER]
+    block = (min(SUBLANES, r), LANES)
+    spec = pl.BlockSpec(block, lambda i: (i, 0))
+    ins = [jnp.asarray(dyn, jnp.float32)]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    if static_factors is not None:
+        ins.append(static_factors)
+        in_specs.append(spec)
+    ins += [arrays[k] for k in IN_ORDER]
+    in_specs += [spec] * len(IN_ORDER)
     out_shapes = [jax.ShapeDtypeStruct((r, LANES),
                                        jnp.int32 if f == "stage"
                                        else jnp.float32)
                   for f in OUT_ORDER]
-    block = (min(SUBLANES, r), LANES)
-    spec = pl.BlockSpec(block, lambda i: (i, 0))
+    p = dict(cfg_static, use_static_factors=static_factors is not None)
     outs = pl.pallas_call(
-        functools.partial(_kernel, cfg_static),
+        functools.partial(_kernel, p),
         grid=(r // block[0],),
-        in_specs=[spec] * len(ins),
+        in_specs=in_specs,
         out_specs=[spec] * len(OUT_ORDER),
         out_shape=out_shapes,
         interpret=interpret,

@@ -4,17 +4,27 @@
                      recomputes through the jnp oracle (standard recompute);
   rg_lru           — same pattern for the linear-recurrence scan;
   mltcp_cc_tick    — drop-in replacement for repro.core.cc_tick: packs the
-                     protocol state into [R, 128] lanes, runs the fused tick
-                     kernel, unpacks; falls back to the jnp path for options
-                     outside the kernel's static specialization.
+                     protocol state into [R, 128] lanes and the protocol
+                     scalars (slope/intercept/g/gamma/INIT_COMM_GAP, plus
+                     the Static-baseline per-flow factors) into kernel
+                     *operands*, runs the fused tick kernel, unpacks.
+                     Traced sweep values therefore stay fused; only the
+                     structural options the kernel does not implement
+                     (non-default favoritism policy, non-linear F family)
+                     fall back to the jnp oracle — loudly, via
+                     ``FALLBACK_COUNT`` and a one-time warning.
 
-``interpret`` defaults to True: this container is CPU-only, and interpret
-mode executes the kernel body exactly as the TPU grid would (the brief's
-validation mode). On real TPUs pass interpret=False.
+``INTERPRET`` defaults to the ``REPRO_INTERPRET`` env var (default "1"):
+this container is CPU-only, and interpret mode executes the kernel body
+exactly as the TPU grid would (the brief's validation mode).  On real TPUs
+run with ``REPRO_INTERPRET=0`` — or pass ``interpret=False`` per call; every
+wrapper takes an ``interpret`` override (None = module default).
 """
 from __future__ import annotations
 
 import functools
+import os
+import warnings
 from typing import Optional
 
 import jax
@@ -29,7 +39,29 @@ from repro.kernels import rg_lru as rl
 
 Array = jnp.ndarray
 
-INTERPRET = True  # CPU container default; set False on TPU
+
+def _env_flag(name: str, default: bool) -> bool:
+    """Parse a boolean env var ("0"/"false"/"no"/"off" false, anything else
+    true); unset *or empty* means the default (a blank export is how shells
+    and CI yamls "clear" a variable, not a request for False)."""
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    return raw.strip().lower() not in ("0", "false", "no", "off")
+
+
+# CPU containers interpret; real TPUs run compiled (REPRO_INTERPRET=0).
+INTERPRET = _env_flag("REPRO_INTERPRET", True)
+
+# Incremented once per trace that routes mltcp_cc_tick through the jnp
+# oracle instead of the fused kernel (mirrors engine.TRACE_COUNT); tests pin
+# "a kernel-enabled sweep falls back zero times" on this counter.
+FALLBACK_COUNT = 0
+_FALLBACK_WARNED: set = set()
+
+
+def _resolve_interpret(override: Optional[bool]) -> bool:
+    return INTERPRET if override is None else override
 
 
 # ---------------------------------------------------------------------------
@@ -46,14 +78,14 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(3, 4, 5))
+                   nondiff_argnums=(3, 4, 5, 6))
 def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
-                    window: int = 0, softcap: Optional[float] = None
-                    ) -> Array:
-    return _flash_fwd_impl(q, k, v, causal, window, softcap)
+                    window: int = 0, softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None) -> Array:
+    return _flash_fwd_impl(q, k, v, causal, window, softcap, interpret)
 
 
-def _flash_fwd_impl(q, k, v, causal, window, softcap):
+def _flash_fwd_impl(q, k, v, causal, window, softcap, interpret=None):
     t, s = q.shape[1], k.shape[1]
     bq = min(fa.DEFAULT_BLOCK_Q, 1 << max((t - 1).bit_length(), 7))
     bk = min(fa.DEFAULT_BLOCK_K, 1 << max((s - 1).bit_length(), 7))
@@ -66,7 +98,7 @@ def _flash_fwd_impl(q, k, v, causal, window, softcap):
     out = fa.flash_attention_fwd(
         qp, kp, vp, causal=causal, window=window, softcap=softcap,
         s_real=s, scale=1.0 / (q.shape[3] ** 0.5),
-        block_q=bq, block_k=bk, interpret=INTERPRET)
+        block_q=bq, block_k=bk, interpret=_resolve_interpret(interpret))
     if pad_d:
         out = out[..., : q.shape[3]]
     if out.shape[1] != t:
@@ -74,11 +106,12 @@ def _flash_fwd_impl(q, k, v, causal, window, softcap):
     return out
 
 
-def _flash_vjp_fwd(q, k, v, causal, window, softcap):
-    return _flash_fwd_impl(q, k, v, causal, window, softcap), (q, k, v)
+def _flash_vjp_fwd(q, k, v, causal, window, softcap, interpret):
+    return _flash_fwd_impl(q, k, v, causal, window, softcap,
+                           interpret), (q, k, v)
 
 
-def _flash_vjp_bwd(causal, window, softcap, res, g):
+def _flash_vjp_bwd(causal, window, softcap, interpret, res, g):
     q, k, v = res
     _, vjp = jax.vjp(lambda q_, k_, v_: ref.ref_attention(
         q_, k_, v_, causal=causal, window=window, softcap=softcap), q, k, v)
@@ -92,23 +125,23 @@ flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 # RG-LRU scan
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def rg_lru(a: Array, b: Array) -> Array:
-    return _rg_lru_impl(a, b)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rg_lru(a: Array, b: Array, interpret: Optional[bool] = None) -> Array:
+    return _rg_lru_impl(a, b, interpret)
 
 
-def _rg_lru_impl(a, b):
+def _rg_lru_impl(a, b, interpret=None):
     ap, pad = _pad_to(a, 2, rl.BLOCK_D)
     bp, _ = _pad_to(b, 2, rl.BLOCK_D)
-    out = rl.rg_lru_scan(ap, bp, interpret=INTERPRET)
+    out = rl.rg_lru_scan(ap, bp, interpret=_resolve_interpret(interpret))
     return out[..., : a.shape[2]] if pad else out
 
 
-def _rg_lru_vjp_fwd(a, b):
-    return _rg_lru_impl(a, b), (a, b)
+def _rg_lru_vjp_fwd(a, b, interpret):
+    return _rg_lru_impl(a, b, interpret), (a, b)
 
 
-def _rg_lru_vjp_bwd(res, g):
+def _rg_lru_vjp_bwd(interpret, res, g):
     a, b = res
     _, vjp = jax.vjp(ref.ref_rg_lru, a, b)
     return vjp(g)
@@ -130,48 +163,65 @@ def _pack(x, n_pad, fill=0.0, dtype=jnp.float32):
     return x.reshape(n_pad // ms.LANES, ms.LANES)
 
 
-def _is_concrete(x) -> bool:
-    """True iff ``x`` can be baked into the kernel's static closure."""
-    return not isinstance(x, jax.core.Tracer)
-
-
 def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
                   fb: core.Feedback, total_bytes: Array,
                   flow_to_job: Optional[Array] = None, n_jobs: int = 0,
                   static_factors: Optional[Array] = None,
                   comm_elapsed: Optional[Array] = None,
                   est_finish: Optional[Array] = None,
-                  dyn: Optional[core.DynamicParams] = None
+                  dyn: Optional[core.DynamicParams] = None,
+                  interpret: Optional[bool] = None
                   ) -> tuple[core.MLTCPState, Array]:
     """core.cc_tick drop-in backed by the fused Pallas kernel.
 
-    The kernel specializes on concrete protocol scalars; a traced
-    ``DynamicParams`` (the sweep axis) cannot be closed over by the Pallas
-    body, so sweeps transparently route through the jnp oracle instead.
+    The protocol scalars (``dyn``, default: the config's floats) and the
+    Static-baseline per-flow ``static_factors`` travel into the kernel as
+    *operands* — an f32[NDYN] SMEM ref and an [R, 128] lanes ref — so
+    traced sweep values (`simulate_sweep`'s vmapped K axis) run fused, one
+    program per compile group.  Only structural options the kernel does not
+    implement (non-default favoritism, non-linear F family) fall back to
+    the jnp oracle; the fallback is loud (``FALLBACK_COUNT`` + one-time
+    warning) so ``use_pallas_kernel=True`` can never silently run unfused.
     """
-    kernel_ok = (static_factors is None
-                 and cfg.favoritism == "largest_data_sent"
-                 and cfg.f_spec == "linear"
-                 and (dyn is None or all(_is_concrete(v) for v in dyn)))
-    if not kernel_ok:
+    # Static [67] factors *replace* F(score) entirely (core.cc_tick checks
+    # them first), so favoritism/f_spec are moot and must not force a
+    # fallback for a Static-baseline arm of an ablation plan.
+    reason = None
+    if static_factors is None:
+        if cfg.favoritism != "largest_data_sent":
+            reason = f"favoritism={cfg.favoritism!r}"
+        elif cfg.f_spec != "linear":
+            reason = f"f_spec={cfg.f_spec!r}"
+    if reason is not None:
+        global FALLBACK_COUNT
+        FALLBACK_COUNT += 1
+        if reason not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(reason)
+            warnings.warn(
+                f"mltcp_cc_tick: option {reason} is outside the fused "
+                f"kernel's static specialization; falling back to the jnp "
+                f"oracle (use_pallas_kernel has no effect for this config)",
+                stacklevel=2)
         return core.cc_tick(cfg, state, fb, total_bytes,
                             flow_to_job=flow_to_job, n_jobs=n_jobs,
                             static_factors=static_factors,
                             comm_elapsed=comm_elapsed,
                             est_finish=est_finish, dyn=dyn)
     if dyn is None:
-        slope, intercept = cfg.slope, cfg.intercept
-        g, gamma, init_comm_gap = cfg.g, cfg.gamma, cfg.init_comm_gap
-    else:
-        slope, intercept = float(dyn.slope), float(dyn.intercept)
-        g, gamma = float(dyn.g), float(dyn.gamma)
-        init_comm_gap = float(dyn.init_comm_gap)
+        dyn = core.DynamicParams.from_config(cfg)
+    # operand-carried protocol scalars, packed per ms.DYN_FIELDS (==
+    # DynamicParams order); concrete floats and traced sweep values take
+    # the same path
+    dyn_vec = jnp.stack([jnp.asarray(v, jnp.float32) for v in dyn])
 
     n = state.cc.cwnd.shape[0]
     n_pad = -(-n // _ROW) * _ROW
 
-    # job-aggregated numerator (paper §4.1: stats aggregated per job)
-    per_flow_bytes = state.det.bytes_sent + fb.num_acks * cfg.cc.mss
+    # job-aggregated numerator (paper §4.1: stats aggregated per job);
+    # iteration.ack_bytes pins the product's rounding (see its docstring) —
+    # the same materialized array feeds the kernel's ack_bytes operand
+    ackb = iteration.ack_bytes(fb.num_acks, cfg.cc.mss)
+    per_flow_bytes = state.det.bytes_sent + ackb
     if cfg.aggregate_by_job and flow_to_job is not None and n_jobs > 0:
         job_tot = jnp.zeros((n_jobs,), per_flow_bytes.dtype
                             ).at[flow_to_job].add(per_flow_bytes)
@@ -192,8 +242,6 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
         "dcqcn_g": cc.dcqcn_g, "alpha_timer": cc.alpha_timer,
         "inc_timer": cc.inc_timer, "cnp_interval": cc.cnp_interval,
         "fast_recovery_stages": cc.fast_recovery_stages,
-        "slope": slope, "intercept": intercept,
-        "g": g, "gamma": gamma, "init_comm_gap": init_comm_gap,
         "aggregate": aggregate,
     }
 
@@ -218,20 +266,24 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
         "stage": _pack(c.inc_stage, n_pad, dtype=jnp.int32),
         "prev_ratio": _pack(d.bytes_ratio, n_pad),
         "num_acks": _pack(fb.num_acks, n_pad),
+        "ack_bytes": _pack(ackb, n_pad),
         "loss": _pack(fb.loss, n_pad),
         "cnp": _pack(fb.cnp, n_pad),
         "now": _pack(now_arr, n_pad),
         "total_bytes": _pack(total_bytes, n_pad, fill=1.0),
         "job_numer": _pack(job_numer, n_pad),
     }
-    out = ms.mltcp_tick_arrays(p, arrays, interpret=INTERPRET)
+    factors = (None if static_factors is None
+               else _pack(static_factors, n_pad, fill=1.0))
+    out = ms.mltcp_tick_arrays(p, dyn_vec, arrays, static_factors=factors,
+                               interpret=_resolve_interpret(interpret))
 
     def unpack(x, dtype=jnp.float32):
         return x.reshape(-1)[:n].astype(dtype)
 
     # boundary counter (metrics-only) maintained outside the kernel, via the
     # same predicate helper the jnp oracle uses (single source of truth)
-    boundary = iteration.boundary_mask(d.prev_ack_tstamp, d.iter_gap, g,
+    boundary = iteration.boundary_mask(d.prev_ack_tstamp, d.iter_gap, dyn.g,
                                        fb.num_acks, fb.now)
 
     det = core.MLTCPState(

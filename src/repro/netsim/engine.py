@@ -485,8 +485,7 @@ def _red_prob(sweep: SweepParams, q: Array) -> Array:
 
 
 def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
-          dyn_from_cfg: bool, st: EngineState,
-          _unused) -> tuple[EngineState, None]:
+          st: EngineState, _unused) -> tuple[EngineState, None]:
     dt = jnp.float32(cfg.dt)
     t = st.tick.astype(jnp.float32) * dt
     M = cfg.topo.n_links
@@ -653,16 +652,14 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     est_finish = jnp.clip(to_deliver / jnp.maximum(rate, 1.0)
                           / statics.period[statics.f2j], 0.0, 1.0)
 
+    # the kernel path takes the same traced DynamicParams as the oracle:
+    # protocol scalars are operands of the fused kernel (DESIGN.md §4), so
+    # K=1 and K>1 sweeps share this one dispatch
     tick_fn = core.cc_tick
     dyn = sweep.dyn()
     if cfg.use_pallas_kernel:
         from repro.kernels import ops as kernel_ops
         tick_fn = kernel_ops.mltcp_cc_tick
-        if dyn_from_cfg:
-            # the sweep values ARE the config's (K=1 `simulate` path), so let
-            # the fused kernel specialize on the concrete scalars; a real
-            # sweep keeps the traced dyn and ops.py routes to the jnp oracle
-            dyn = None
     static_factors = (sweep.static_job_factors[statics.f2j]
                       if sweep.static_job_factors is not None else None)
     proto, _ = tick_fn(
@@ -719,13 +716,13 @@ class RawSimOutput(NamedTuple):
     final_state: EngineState
 
 
-def _run_single(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
-                dyn_from_cfg: bool) -> RawSimOutput:
+def _run_single(cfg: SimConfig, statics: TickStatics,
+                sweep: SweepParams) -> RawSimOutput:
     """One simulation as a pure traced function of an unbatched sweep point."""
     st = _init_state(cfg, statics, sweep)
     ticks_per_chunk = max(1, cfg.n_ticks // cfg.n_chunks)
     n_chunks = cfg.n_ticks // ticks_per_chunk
-    tick = partial(_tick, cfg, statics, sweep, dyn_from_cfg)
+    tick = partial(_tick, cfg, statics, sweep)
 
     def chunk(st: EngineState, _):
         st = st._replace(acc_util=jnp.zeros_like(st.acc_util),
@@ -755,18 +752,12 @@ def _run_single(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
 TRACE_COUNT = 0
 
 
-@partial(jax.jit, static_argnums=(0, 2))
-def _run_sweep(cfg: SimConfig, sweep: SweepParams,
-               dyn_from_cfg: bool) -> RawSimOutput:
-    """``dyn_from_cfg``: static promise that the sweep's protocol scalars
-    equal the config's (the K=1 `simulate` path), which lets the fused
-    Pallas kernel specialize on them instead of falling back (DESIGN.md §4).
-    """
+@partial(jax.jit, static_argnums=(0,))
+def _run_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
     global TRACE_COUNT
     TRACE_COUNT += 1
     statics = _build_statics(cfg)
-    return jax.vmap(lambda s: _run_single(cfg, statics, s,
-                                          dyn_from_cfg))(sweep)
+    return jax.vmap(lambda s: _run_single(cfg, statics, s))(sweep)
 
 
 def _check_cfg(cfg: SimConfig) -> None:
@@ -797,11 +788,17 @@ def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
             raise ValueError(
                 f"sweep field {name!r} has shape {v.shape}; expected a "
                 f"leading sweep axis of length {k} (use make_sweep)")
-    return _run_sweep(cfg, sweep, False)
+    return _run_sweep(cfg, sweep)
 
 
 def simulate(cfg: SimConfig) -> RawSimOutput:
-    """Run one simulation (a K=1 `simulate_sweep`, kept for compatibility)."""
+    """Run one simulation (a K=1 `simulate_sweep`, kept for compatibility).
+
+    Shares `_run_sweep`'s jit cache entry with K=1 sweeps of the same
+    config — there is no separate single-run program anymore (the fused
+    kernel takes its protocol scalars as operands, so the old "specialize
+    on the config's concrete floats" path is gone; DESIGN.md §4).
+    """
     _check_cfg(cfg)
-    raw = _run_sweep(cfg, make_sweep(cfg), True)
+    raw = _run_sweep(cfg, make_sweep(cfg))
     return jax.tree_util.tree_map(lambda x: x[0], raw)

@@ -384,6 +384,13 @@ class PlanResult:
     plan: Plan
     results: list[metrics.SimResult]
     n_compile_groups: int
+    # jnp-oracle fallbacks of the fused CC-tick kernel traced while running
+    # this plan (0 unless a config asked for use_pallas_kernel with options
+    # outside the kernel's specialization — see repro.kernels.ops).  Like
+    # engine.TRACE_COUNT this counts at *trace* time: a plan whose compile
+    # groups are already in the jit cache reports 0 — read it off the first
+    # run of a given static config.
+    n_kernel_fallbacks: int = 0
 
     def __len__(self) -> int:
         return len(self.results)
@@ -420,6 +427,15 @@ class PlanResult:
 # The runner
 # ---------------------------------------------------------------------------
 
+def _kernel_fallback_count() -> int:
+    """Current repro.kernels.ops.FALLBACK_COUNT without importing kernels
+    (plans that never enable use_pallas_kernel shouldn't pay the import)."""
+    import sys
+
+    mod = sys.modules.get("repro.kernels.ops")
+    return getattr(mod, "FALLBACK_COUNT", 0) if mod is not None else 0
+
+
 def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
     """Execute a plan: one `simulate_sweep` per compile group.
 
@@ -445,6 +461,7 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
 
     groups = _compile_groups(cfgs, pad_jobs)
     results: list[Optional[metrics.SimResult]] = [None] * len(points)
+    fallbacks_before = _kernel_fallback_count()
     for group in groups:
         per_point = [_point_params(cfgs[i], overrides[i], group)
                      for i in group.idxs]
@@ -459,4 +476,6 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
             results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
                                              n_jobs=point.n_jobs)
     return PlanResult(plan=plan, results=results,
-                      n_compile_groups=len(groups))
+                      n_compile_groups=len(groups),
+                      n_kernel_fallbacks=(_kernel_fallback_count()
+                                          - fallbacks_before))

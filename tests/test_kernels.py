@@ -1,7 +1,13 @@
 """Pallas kernel validation (interpret mode) against the pure-jnp oracles.
 
 Per the brief: sweep shapes/dtypes per kernel and assert_allclose vs ref.py.
+The CC-tick kernel is additionally exercised with *traced* DynamicParams
+and under vmap (the sweep-engine shapes), where the operand-carried
+protocol scalars must keep it fused — FALLBACK_COUNT pins that no case
+silently routes through the jnp oracle.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +16,7 @@ import pytest
 from repro.core import (
     Algo,
     CCParams,
+    DynamicParams,
     Feedback,
     MLTCPConfig,
     Variant,
@@ -190,6 +197,190 @@ def test_mltcp_tick_kernel_matches_core(case, n):
             np.asarray(getattr(got_st.det, name)),
             np.asarray(getattr(want_st.det, name)), rtol=1e-6,
             err_msg=f"det.{name}")
+
+
+def _random_feedback(n, key, now=0.0123):
+    ks = jax.random.split(key, 4)
+    return Feedback(
+        num_acks=jnp.where(jax.random.uniform(ks[0], (n,)) < 0.7,
+                           jax.random.uniform(ks[1], (n,)) * 40.0, 0.0),
+        loss=jax.random.uniform(ks[2], (n,)) < 0.2,
+        cnp=jax.random.uniform(ks[3], (n,)) < 0.3,
+        now=jnp.asarray(now),
+    )
+
+
+def _assert_states_equal(got, want, exact=False):
+    assert_fn = (np.testing.assert_array_equal if exact else
+                 lambda a, b, err_msg: np.testing.assert_allclose(
+                     a, b, rtol=1e-6, err_msg=err_msg))
+    for grp in ("cc", "det"):
+        for name in getattr(want, grp)._fields:
+            assert_fn(np.asarray(getattr(getattr(got, grp), name)),
+                      np.asarray(getattr(getattr(want, grp), name)),
+                      err_msg=f"{grp}.{name}")
+
+
+@pytest.mark.parametrize("case", [(Algo.RENO, Variant.WI),
+                                  (Algo.CUBIC, Variant.MD),
+                                  (Algo.DCQCN, Variant.BOTH)])
+def test_mltcp_tick_kernel_traced_dyn_stays_fused(case):
+    """Traced DynamicParams (the sweep axis) run through the fused kernel —
+    operand-carried scalars, no oracle fallback, bit-equal to core."""
+    algo, variant = case
+    n = 70
+    cfg = MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant)))
+    st = _random_protocol_state(n, cfg, jax.random.PRNGKey(5))
+    fb = _random_feedback(n, jax.random.PRNGKey(6))
+    total = jnp.full((n,), 1e8)
+    f2j = jnp.arange(n) % 4
+
+    def run(tick_fn, dyn_vals):
+        dyn = DynamicParams(*dyn_vals)
+        st2, rate = tick_fn(cfg, st, fb, total, flow_to_job=f2j, n_jobs=4,
+                            dyn=dyn)
+        return st2, rate
+
+    dyn_vals = tuple(jnp.asarray(v, jnp.float32)
+                     for v in (1.3, 0.4, 0.8, 0.45, 2e-3))
+    before = ops.FALLBACK_COUNT
+    got_st, got_rate = jax.jit(lambda dv: run(ops.mltcp_cc_tick, dv))(dyn_vals)
+    want_st, want_rate = jax.jit(lambda dv: run(cc_tick, dv))(dyn_vals)
+    assert ops.FALLBACK_COUNT == before
+    _assert_states_equal(got_st, want_st, exact=True)
+    np.testing.assert_array_equal(np.asarray(got_rate), np.asarray(want_rate))
+
+
+def test_mltcp_tick_kernel_vmaps_over_dyn():
+    """A batched DynamicParams axis (K sweep points) vmaps over the kernel
+    call — one fused program, K results matching core point-for-point."""
+    n, k = 40, 5
+    cfg = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO),
+                                  variant=int(Variant.WI)))
+    st = _random_protocol_state(n, cfg, jax.random.PRNGKey(8))
+    fb = _random_feedback(n, jax.random.PRNGKey(9))
+    total = jnp.full((n,), 1e8)
+    f2j = jnp.arange(n) % 3
+    slopes = jnp.linspace(0.5, 2.5, k, dtype=jnp.float32)
+    base = DynamicParams.from_config(cfg)
+    dyns = DynamicParams(slope=slopes,
+                         intercept=jnp.broadcast_to(base.intercept, (k,)),
+                         g=jnp.broadcast_to(base.g, (k,)),
+                         gamma=jnp.broadcast_to(base.gamma, (k,)),
+                         init_comm_gap=jnp.broadcast_to(base.init_comm_gap,
+                                                        (k,)))
+
+    def one(tick_fn, dyn):
+        st2, rate = tick_fn(cfg, st, fb, total, flow_to_job=f2j, n_jobs=3,
+                            dyn=dyn)
+        return st2.cc.cwnd, st2.det.bytes_ratio, rate
+
+    before = ops.FALLBACK_COUNT
+    got = jax.jit(jax.vmap(lambda d: one(ops.mltcp_cc_tick, d)))(dyns)
+    want = jax.jit(jax.vmap(lambda d: one(cc_tick, d)))(dyns)
+    assert ops.FALLBACK_COUNT == before
+    for g, w in zip(got, want):
+        assert g.shape[0] == k
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # the sweep axis must actually vary the outcome
+    assert np.unique(np.asarray(got[0]), axis=0).shape[0] > 1
+
+
+def test_mltcp_tick_kernel_static_factors():
+    """The Static [67] per-flow factors ride into the kernel as an operand
+    (they used to force an unconditional oracle fallback) — and since they
+    replace F(score) entirely, even a non-linear f_spec stays fused."""
+    n = 33
+    cfg = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO),
+                                  variant=int(Variant.WI)),
+                      f_spec="F3")
+    st = _random_protocol_state(n, cfg, jax.random.PRNGKey(11))
+    fb = _random_feedback(n, jax.random.PRNGKey(12))
+    total = jnp.full((n,), 1e8)
+    f2j = jnp.arange(n) % 3
+    factors = jnp.asarray(0.5 + 1.5 * (jnp.arange(n) % 3) / 2.0, jnp.float32)
+
+    before = ops.FALLBACK_COUNT
+    got_st, got_rate = ops.mltcp_cc_tick(cfg, st, fb, total, flow_to_job=f2j,
+                                         n_jobs=3, static_factors=factors)
+    assert ops.FALLBACK_COUNT == before
+    want_st, want_rate = cc_tick(cfg, st, fb, total, flow_to_job=f2j,
+                                 n_jobs=3, static_factors=factors)
+    _assert_states_equal(got_st, want_st)
+    np.testing.assert_allclose(np.asarray(got_rate), np.asarray(want_rate),
+                               rtol=1e-6)
+
+
+def test_mltcp_tick_fallback_is_loud():
+    """Structural options outside the kernel's specialization fall back to
+    the oracle — incrementing FALLBACK_COUNT and warning once."""
+    n = 16
+    cfg = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO),
+                                  variant=int(Variant.WI)),
+                      favoritism="earliest_iter_start")
+    st = _random_protocol_state(n, cfg, jax.random.PRNGKey(13))
+    fb = _random_feedback(n, jax.random.PRNGKey(14))
+    total = jnp.full((n,), 1e8)
+
+    before = ops.FALLBACK_COUNT
+    ops._FALLBACK_WARNED.discard("favoritism='earliest_iter_start'")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got_st, _ = ops.mltcp_cc_tick(cfg, st, fb, total)
+    assert ops.FALLBACK_COUNT == before + 1
+    assert any("favoritism" in str(x.message) for x in w)
+    # one-time: a second call with the same reason stays silent
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        ops.mltcp_cc_tick(cfg, st, fb, total)
+    assert ops.FALLBACK_COUNT == before + 2
+    assert not any("favoritism" in str(x.message) for x in w2)
+    # and the fallback result is the oracle's
+    want_st, _ = cc_tick(cfg, st, fb, total)
+    _assert_states_equal(got_st, want_st)
+
+
+def test_interpret_env_flag_parsing():
+    """REPRO_INTERPRET controls ops.INTERPRET without a source edit."""
+    assert ops._env_flag("REPRO_TEST_MISSING_FLAG", True) is True
+    assert ops._env_flag("REPRO_TEST_MISSING_FLAG", False) is False
+    import os
+    for raw, want in [("0", False), ("false", False), ("no", False),
+                      ("", True), ("  ", True),   # blank == unset -> default
+                      ("1", True), ("true", True), ("TPU", True)]:
+        os.environ["REPRO_TEST_FLAG"] = raw
+        try:
+            assert ops._env_flag("REPRO_TEST_FLAG", True) is want, raw
+        finally:
+            del os.environ["REPRO_TEST_FLAG"]
+
+
+def test_interpret_per_call_override():
+    """Every kernel wrapper takes a per-call interpret override (None =
+    module default); interpret=True must behave exactly like the default
+    on this CPU container."""
+    n = 24
+    cfg = MLTCPConfig(cc=CCParams(algo=int(Algo.RENO),
+                                  variant=int(Variant.WI)))
+    st = _random_protocol_state(n, cfg, jax.random.PRNGKey(15))
+    fb = _random_feedback(n, jax.random.PRNGKey(16))
+    total = jnp.full((n,), 1e8)
+    a_st, a_rate = ops.mltcp_cc_tick(cfg, st, fb, total, interpret=True)
+    b_st, b_rate = ops.mltcp_cc_tick(cfg, st, fb, total)
+    _assert_states_equal(a_st, b_st, exact=True)
+    np.testing.assert_array_equal(np.asarray(a_rate), np.asarray(b_rate))
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    np.testing.assert_array_equal(
+        np.asarray(ops.flash_attention(q, k, v, True, 0, None, True)),
+        np.asarray(ops.flash_attention(q, k, v)))
+    a = jax.random.uniform(ks[0], (2, 32, 128), jnp.float32, 0.2, 0.99)
+    x = jax.random.normal(ks[1], (2, 32, 128))
+    np.testing.assert_array_equal(np.asarray(ops.rg_lru(a, x, True)),
+                                  np.asarray(ops.rg_lru(a, x)))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])

@@ -134,6 +134,65 @@ def test_make_sweep_validates():
         netsim.simulate_sweep(cfg, netsim.sweep_of(cfg))  # unbatched
 
 
+def test_kernel_sweep_runs_fused_and_matches_oracle_bitwise():
+    """A K>1 sweep with use_pallas_kernel=True runs the fused kernel
+    (FALLBACK_COUNT == 0) and is *bit-equal* to the jnp-oracle sweep on
+    every RawSimOutput field — the operand-carried protocol scalars
+    (DESIGN.md §4) leave no numerical daylight between the two paths."""
+    from repro.kernels import ops
+
+    cfg_o = _cfg(sim_time=0.4)
+    cfg_k = dataclasses.replace(cfg_o, use_pallas_kernel=True)
+    sweep, _ = netsim.grid_sweep(cfg_o, slope=[0.5, 1.75, 2.5])
+    before_fb = ops.FALLBACK_COUNT
+    before_tr = engine.TRACE_COUNT
+    raw_k = netsim.simulate_sweep(cfg_k, sweep)
+    assert ops.FALLBACK_COUNT == before_fb          # stayed fused
+    assert engine.TRACE_COUNT == before_tr + 1      # one compile group
+    raw_o = netsim.simulate_sweep(cfg_o, sweep)
+    for name in raw_o._fields:
+        assert _tree_equal(getattr(raw_o, name), getattr(raw_k, name)), \
+            f"kernel sweep deviates from oracle on RawSimOutput.{name}"
+
+
+def test_kernel_sweep_with_job_active_mask_matches_oracle():
+    """The padded-jobs axis (job_active-masked lanes) under the fused
+    kernel: still zero fallbacks, still bit-equal to the oracle sweep."""
+    from repro.kernels import ops
+
+    cfg_o = _cfg(n_jobs=3, sim_time=0.4)
+    cfg_k = dataclasses.replace(cfg_o, use_pallas_kernel=True)
+    mask = np.asarray([[1, 1, 1], [1, 1, 0], [1, 0, 0]], bool)
+    sweep = netsim.make_sweep(cfg_o, seed=[0, 1, 2], job_active=mask)
+    before = ops.FALLBACK_COUNT
+    raw_k = netsim.simulate_sweep(cfg_k, sweep)
+    assert ops.FALLBACK_COUNT == before
+    raw_o = netsim.simulate_sweep(cfg_o, sweep)
+    assert _tree_equal(raw_o, raw_k)
+    # masked jobs really are inert under the kernel path
+    counts = np.asarray(raw_k.iter_counts)
+    assert counts[1, 2] == 0 and counts[2, 1] == 0 and counts[2, 2] == 0
+    assert counts[0].min() > 0
+
+
+def test_kernel_plan_reports_zero_fallbacks():
+    """run_plan's compile-group accounting surfaces kernel fallbacks; a
+    linear-F largest_data_sent plan must report none."""
+    cfg = _cfg(sim_time=0.2)
+
+    def build(pt):
+        return dataclasses.replace(cfg, use_pallas_kernel=True)
+
+    plan = netsim.Plan(name="kernel-smoke",
+                       axes=(netsim.Axis("slope", (1.0, 1.75)),
+                             netsim.Axis("seed", (0, 1))),
+                       build=build)
+    pr = netsim.run_plan(plan)
+    assert pr.n_compile_groups == 1
+    assert pr.n_kernel_fallbacks == 0
+    assert len(pr) == 4
+
+
 def test_static_factors_sweep():
     """The Static [67] baseline's per-job factors are sweepable.
 
