@@ -5,8 +5,9 @@ of its two links; the affinity graph has a loop, so Cassini has no feasible
 schedule and Static has no consistent unfairness assignment. MLQCN converges
 anyway (the favoritism signal is per-flow local).
 
-One plan: scheme x seed (seed-averaged with error bars; the Cassini scheme
-carries its schedule as static config so it compiles separately).
+One plan: scheme x seed (seed-averaged with error bars).  The Cassini
+schedule rides the traced `cassini_*` sweep leaves (period <= 0 = off),
+so base and cassini share the OFF-variant compile group.
 """
 from __future__ import annotations
 

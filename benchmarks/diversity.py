@@ -4,7 +4,11 @@ The Table-2 snapshots (different models, batch sizes, parallelism, placement
 on the two-tier fabric) run with DCQCN vs MLQCN; "ideal" is each job in
 isolation. The paper: MLQCN lands within ~5% of ideal on average.
 
-One plan per snapshot: scheme x solo x seed.  Isolation is expressed with
+One plan over all snapshots: snap x scheme x solo x seed.  Snapshots share
+the two-tier fabric and differ only in their phase programs, which are
+traced workload leaves — so snapshots with the same phase *structure* merge
+into one compile group per scheme (snapshots whose P_max differs, e.g. the
+hybrid-parallel GPT-3 program, get their own).  Isolation is expressed with
 the padded-jobs mask (`job_active` one-hot per job), so every "job alone on
 the fabric" run keeps the full topology/JobSpec — faithful isolation on the
 same links — and shares the baseline scheme's compile group instead of
@@ -18,9 +22,10 @@ from benchmarks import common
 from repro import netsim, workload
 
 
-def _snapshot_plan(snap) -> netsim.Plan:
-    profs = list(snap.profiles)
-    n = len(profs)
+def run() -> tuple[dict, int]:
+    snaps = workload.table2_snapshots(sockets_per_job=2)
+    by_name = {s.name: s for s in snaps}
+    n = 2                       # every Table-2 snapshot pairs two jobs
 
     def solo_mask(v):
         if v == "all":
@@ -30,36 +35,37 @@ def _snapshot_plan(snap) -> netsim.Plan:
         return mask
 
     def build(pt):
+        snap = by_name[pt["snap"]]
         variant = "WI" if pt["scheme"] == "mlqcn" else "OFF"
-        return common.build_cfg(snap.topo, profs,
+        return common.build_cfg(snap.topo, list(snap.profiles),
                                 common.protocol("dcqcn", variant))
 
-    return common.plan(
-        build, name=f"table2-{snap.name}",
+    pr = common.run_plan(common.plan(
+        build, name="table2",
         # isolation points only need the baseline protocol
         where=lambda pt: pt["solo"] == "all" or pt["scheme"] == "base",
+        snap=tuple(by_name),
         scheme=("base", "mlqcn"),
         solo=netsim.Axis("solo", ("all",) + tuple(range(n)),
                          field="job_active", resolve=solo_mask),
-        seed=common.seed_axis())
+        seed=common.seed_axis()))
+    # one group per (scheme, phase-structure): single-phase snapshots merge
+    assert pr.n_compile_groups <= 4, pr.n_compile_groups
+    assert pr.n_kernel_fallbacks == 0
 
-
-def run() -> tuple[dict, int]:
     out = {}
-    n_ticks = 0
-    for snap in workload.table2_snapshots(sockets_per_job=2):
+    for snap in snaps:
         profs = list(snap.profiles)
-        pr = common.run_plan(_snapshot_plan(snap))
-        assert pr.n_compile_groups == 2, pr.n_compile_groups
-        base = pr.select(scheme="base", solo="all")
-        ml = pr.select(scheme="mlqcn", solo="all")
+        base = pr.select(snap=snap.name, scheme="base", solo="all")
+        ml = pr.select(snap=snap.name, scheme="mlqcn", solo="all")
         sp = netsim.sweep_speedup_stats(base, ml)
         # per-job: MLQCN's seed-mean avg iter vs the job's isolation run
         # (warmup=2: short smoke windows record few iterations per job)
         vs_ideal = []
         for j in range(len(profs)):
             iso = np.mean([r.avg_iter(j, warmup=2)
-                           for r in pr.select(scheme="base", solo=j)])
+                           for r in pr.select(snap=snap.name, scheme="base",
+                                              solo=j)])
             mlj = np.mean([r.avg_iter(j, warmup=2) for r in ml])
             vs_ideal.append(mlj / iso)
         out[snap.name] = {
@@ -71,8 +77,7 @@ def run() -> tuple[dict, int]:
             "p99_speedup": round(sp["p99_speedup"], 3),
             "vs_ideal": round(float(np.mean(vs_ideal)), 3),
         }
-        n_ticks += pr.n_ticks
-    return out, n_ticks
+    return out, pr.n_ticks
 
 
 if __name__ == "__main__":

@@ -8,9 +8,10 @@
   fig17: WI vs MD variants perform similarly (Reno and CUBIC).
 
 Each suite is one plan; static axes (F family, variant, algorithm) become
-compile groups, dynamic axes (slope, intercept, seed) ride the batched
-sweep inside each group, and selections by axis label pair the seeds for
-the error bars.
+compile groups, dynamic axes (slope, intercept, seed — and, since the
+workload became traced leaves, phase programs and straggle probabilities)
+ride the batched sweep inside each group, and selections by axis label
+pair the seeds for the error bars.
 """
 from __future__ import annotations
 
@@ -64,6 +65,7 @@ def fig16_heatmap(slopes=(0.5, 1.0, 1.75, 2.5),
         variant=("OFF", "WI"), slope=tuple(slopes),
         intercept=tuple(intercepts), seed=common.seed_axis()))
     assert pr.n_compile_groups == 2, pr.n_compile_groups
+    assert pr.n_kernel_fallbacks == 0
 
     base = pr.select(variant="OFF")
     grid = {}

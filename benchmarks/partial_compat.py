@@ -5,14 +5,14 @@ varies batch size). Static = fixed unfair per-job factors; MLQCN adapts.
 The paper: below compat ~0.7 Static's p99 drops under 1.0 (worse than
 default DCQCN) while MLQCN stays >= 1.
 
-One plan: compute-scale x scheme x seed.  The compute scale reshapes the
-(static) JobSpec, so each (scale, scheme) cell is a compile group; the
-Static baseline's per-job factors ride the sweep as dynamic values, and
-every cell reports seed-averaged numbers.
+One plan: compute-scale x scheme x seed.  The compute scale only changes
+workload *values*, which are traced sweep leaves, so every scale shares a
+trace; the Static baseline's per-job factors ride the same group via the
+adaptive-sentinel encoding (factor < 0 keeps F).  The whole grid runs in
+two compile groups — base (OFF) and {mlqcn, static} (WI) — with seed error
+bars batched on the sweep axis.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
@@ -22,17 +22,12 @@ from repro import netsim, workload
 STATIC_FACTORS = np.asarray([1.3, 1.0, 0.7])
 
 
-def _job_with_compute(base, compute_s: float):
-    return dataclasses.replace(base, compute_s=(compute_s,))
-
-
 def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
     topo = netsim.dumbbell(3, sockets_per_job=2)
     base_prof = workload.profile_for("gpt2")
 
     def profs_for(cs):
-        return [_job_with_compute(base_prof, base_prof.compute_s[0] * cs)
-                for _ in range(3)]
+        return [base_prof.compute_scaled(cs) for _ in range(3)]
 
     def build(pt):
         # Static [67]: constant per-job factors replace F; needs a non-OFF
@@ -47,6 +42,8 @@ def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
         build, name="fig13",
         cs=tuple(compute_scales), scheme=("base", "mlqcn", "static"),
         seed=common.seed_axis()))
+    assert pr.n_compile_groups <= 2, pr.n_compile_groups
+    assert pr.n_kernel_fallbacks == 0
     out = {}
     for cs in compute_scales:
         compat = workload.compatibility_score(

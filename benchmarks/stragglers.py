@@ -5,9 +5,11 @@ isolation time). Compare MLQCN and Cassini (both normalized to default
 DCQCN). The paper: MLQCN's speedup is flat in p; Cassini's tail collapses
 beyond p ~ 10% because its agent forces re-alignment skips.
 
-One plan: p x scheme x seed.  The straggle probability lives in the (static)
-JobSpec so each (p, scheme) cell compiles once, with the multi-seed error
-bars batched on the sweep axis inside it.
+One plan: p x scheme x seed.  The straggle probability is a *dynamic* sweep
+axis (a traced `straggle_prob` leaf), and the Cassini schedule rides the
+traced cassini leaves, so the whole grid folds into two compile groups —
+{base, cassini} x all p (variant OFF) and mlqcn x all p (variant WI) — with
+the multi-seed error bars batched on the same sweep axis.
 """
 from __future__ import annotations
 
@@ -25,13 +27,15 @@ def run(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> tuple[dict, int]:
         variant = "WI" if pt["scheme"] == "mlqcn" else "OFF"
         return common.build_cfg(
             topo, profs, common.protocol("dcqcn", variant),
-            straggle_prob=[pt["p"], pt["p"]],
             cassini=sched if pt["scheme"] == "cassini" else None)
 
     pr = common.run_plan(common.plan(
         build, name="fig12",
-        p=tuple(probs), scheme=("base", "mlqcn", "cassini"),
+        p=netsim.Axis("p", tuple(probs), field="straggle_prob"),
+        scheme=("base", "mlqcn", "cassini"),
         seed=common.seed_axis()))
+    assert pr.n_compile_groups <= 2, pr.n_compile_groups
+    assert pr.n_kernel_fallbacks == 0
     out = {}
     for p in probs:
         base = pr.select(p=p, scheme="base")

@@ -174,14 +174,22 @@ def cc_tick(cfg: MLTCPConfig,
                                         fb.now, job_bytes_sent=job_bytes)
 
     # --- favoritism score -> F values (or Static constants) ---
-    if static_factors is not None:
-        f_vals = static_factors
-    elif cfg.cc.variant == int(Variant.OFF):
-        f_vals = jnp.ones_like(det.bytes_ratio)
+    if cfg.cc.variant == int(Variant.OFF):
+        adaptive = jnp.ones_like(det.bytes_ratio)
     else:
         score = _favoritism_score(cfg, det, fb, comm_elapsed, est_finish)
         fn = aggressiveness.make_fn(cfg.f_spec, dyn.slope, dyn.intercept)
-        f_vals = fn(score)
+        adaptive = fn(score)
+    if static_factors is not None:
+        # Static [67]: a non-negative factor replaces F for that flow; a
+        # negative entry is the "adaptive" sentinel — that flow keeps the
+        # computed F.  The sentinel lets Static and adaptive plan points
+        # share one traced program (the factors are operand values), and
+        # the select is exact: all-non-negative factors reproduce the pure
+        # Static baseline bit-for-bit, all-negative the adaptive one.
+        f_vals = jnp.where(static_factors >= 0.0, static_factors, adaptive)
+    else:
+        f_vals = adaptive
 
     f_wi, f_md = reno.split_f(cfg.cc, f_vals)
 

@@ -102,12 +102,18 @@ def _kernel(p, dyn_ref, *refs):
                                jnp.where(has_ack, max_gap, max_gap_r[...]))
 
     # ---------------- F(bytes_ratio), variant routing ----------------
-    if p["use_static_factors"]:
-        f_vals = factors_r[...]          # Static [67]: constants replace F
-    elif p["variant"] == int(Variant.OFF):
-        f_vals = jnp.ones_like(ratio)
+    if p["variant"] == int(Variant.OFF):
+        adaptive = jnp.ones_like(ratio)
     else:
-        f_vals = slope * ratio + intercept
+        adaptive = slope * ratio + intercept
+    if p["use_static_factors"]:
+        # Static [67] with the adaptive sentinel (mirrors core.cc_tick):
+        # factor >= 0 replaces F for that flow, factor < 0 keeps the
+        # computed F — an exact elementwise select, so mixed Static /
+        # adaptive sweep points share this one fused program
+        f_vals = jnp.where(factors_r[...] >= 0.0, factors_r[...], adaptive)
+    else:
+        f_vals = adaptive
     one = jnp.ones_like(f_vals)
     f_wi = f_vals if p["variant"] in (int(Variant.WI), int(Variant.BOTH)) \
         else one

@@ -183,9 +183,14 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
     the jnp oracle; the fallback is loud (``FALLBACK_COUNT`` + one-time
     warning) so ``use_pallas_kernel=True`` can never silently run unfused.
     """
-    # Static [67] factors *replace* F(score) entirely (core.cc_tick checks
-    # them first), so favoritism/f_spec are moot and must not force a
-    # fallback for a Static-baseline arm of an ablation plan.
+    # Static [67] factors replace F(score) per flow (negative entries are
+    # the "adaptive" sentinel — see core.cc_tick), so with all-non-negative
+    # factors favoritism/f_spec are moot and must not force a fallback for
+    # a Static-baseline arm of an ablation plan.  Sentinel entries reuse
+    # the kernel's adaptive branch, which implements only the default
+    # linear F over largest_data_sent; the experiment layer therefore
+    # never merges Static and adaptive points into one kernel-enabled
+    # group unless that default applies (experiment._compile_groups).
     reason = None
     if static_factors is None:
         if cfg.favoritism != "largest_data_sent":

@@ -7,8 +7,11 @@ Parameter/seed sweeps batch over a leading vmap axis (`simulate_sweep`):
 one trace, one compile, K simulations per device program.  The experiment
 layer (`Axis`/`Plan`/`run_plan`) declares whole evaluation matrices over
 static *and* dynamic axes and lowers them onto that sweep axis, one compile
-group per distinct static signature, with job-count grids padded + masked
-into a single group and K optionally sharded across local devices.
+group per distinct static signature.  Workload *values* — phase programs,
+straggle probabilities, Cassini schedules, Static factors — are traced
+sweep leaves, so straggler/compat grids fold into one group per variant;
+job-count grids pad + mask into a single group; K optionally shards across
+local devices; and `run_plan(..., cache_dir=)` makes runs resumable.
 """
 
 from repro.netsim.topology import Topology, dumbbell, triangle, two_tier

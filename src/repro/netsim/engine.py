@@ -5,15 +5,18 @@ store-and-forward link queues with RED/ECN, RTT-delayed ack/loss/CNP feedback,
 and the MLTCP-augmented congestion-control update (`repro.core.cc_tick`).
 
 Configuration is split (DESIGN.md §3): `SimConfig` is the *static* half —
-topology, jobs, algorithm/variant choices, everything that shapes the traced
-program — and `SweepParams` is the *dynamic* half: protocol scalars (slope,
-intercept, g, gamma, INIT_COMM_GAP), RED thresholds, the Static-baseline job
-factors, the PRNG seed and the `job_active` padding mask, carried as traced
-values.  `simulate_sweep` vmaps the whole chunked scan over a leading sweep
-axis, so a K-point parameter / seed grid is one trace, one compile, and one
-device program instead of K.  The experiment layer (`netsim.experiment`,
-DESIGN.md §5) lowers whole evaluation matrices — static axes included —
-onto this sweep axis, one compile group per static signature.
+topology, job-array *shapes*, algorithm/variant choices, everything that
+shapes the traced program — and `SweepParams` is the *dynamic* half:
+protocol scalars (slope, intercept, g, gamma, INIT_COMM_GAP), RED
+thresholds, the per-job workload values (phase programs `compute` /
+`comm_bytes`, `straggle_prob`, `iso_iter`), the Static-baseline job factors,
+the Cassini schedule values, the PRNG seed and the `job_active` padding
+mask, carried as traced values.  `simulate_sweep` vmaps the whole chunked
+scan over a leading sweep axis, so a K-point parameter / seed / workload
+grid is one trace, one compile, and one device program instead of K.  The
+experiment layer (`netsim.experiment`, DESIGN.md §5) lowers whole
+evaluation matrices — static axes included — onto this sweep axis, one
+compile group per static signature.
 
 Model summary (hardware-adaptation notes in DESIGN.md §2):
   * fluid flows: each tick a flow injects ``min(rate*dt, bytes_left)``;
@@ -155,6 +158,15 @@ class SweepParams(NamedTuple):
     Unbatched (scalar) instances describe a single simulation; batched
     instances carry a leading [K] axis on every non-None leaf.
 
+    The *workload* is traced too (the straggler / partial-compat axis):
+    ``compute`` / ``comm_bytes`` are each job's per-iteration phase program,
+    padded to a shared [J, P_max] shape — only ``n_phases`` (a static shape
+    mask in `JobSpec`) decides which columns are live, so padding columns
+    with zeros never changes a trajectory — and ``straggle_prob`` /
+    ``iso_iter`` drive the per-iteration straggler sampling.  Plans that
+    sweep batch size or straggle probability therefore share one compile
+    group instead of compiling per workload value.
+
     ``job_active`` is the padded-jobs axis (DESIGN.md §5): a [J] bool mask
     that deactivates trailing jobs of an over-provisioned fabric, so a
     job-count grid (Fig. 10's 2..8 jobs) runs every point on the *largest*
@@ -162,6 +174,12 @@ class SweepParams(NamedTuple):
     Inactive jobs never start, so their flows inject nothing and are inert
     (lane-stable RNG keeps the active lanes bit-comparable to an unpadded
     run).  None means "all jobs active" and adds no masking ops.
+
+    ``cassini_offset`` / ``cassini_period`` / ``cassini_eps`` carry the
+    Cassini [66] baseline's schedule as values: a job with period <= 0 is
+    simply un-scheduled, which lets Cassini and non-Cassini points of a
+    plan share one compile group (the branch exists in the program, the
+    per-job gate decides).  All three are None when no point needs them.
     """
 
     slope: Array                # F(x) = slope * x + intercept      (Eq. 3)
@@ -173,8 +191,15 @@ class SweepParams(NamedTuple):
     red_qmax: Array             # RED ramp knee (bytes)
     red_pmax: Array             # RED mark/drop probability at the knee
     seed: Array                 # int32 PRNG seed
+    compute: Array              # [J, P] per-phase compute seconds
+    comm_bytes: Array           # [J, P] per-phase comm bytes
+    straggle_prob: Array        # [J] straggle probability per iteration
+    iso_iter: Array             # [J] isolation iteration time (s)
     static_job_factors: Optional[Array]  # [J] Static-baseline factors or None
     job_active: Optional[Array] = None   # [J] bool mask (padded-jobs axis)
+    cassini_offset: Optional[Array] = None  # [J] slot-grid offsets (s)
+    cassini_period: Optional[Array] = None  # [J] slot periods; <=0 = off
+    cassini_eps: Optional[Array] = None     # scalar agent tolerance (s)
 
     def dyn(self) -> core.DynamicParams:
         """The protocol-layer slice, for `core.cc_tick`."""
@@ -184,17 +209,45 @@ class SweepParams(NamedTuple):
 
 
 # Per-sweep-point shapes/dtypes: most fields are scalars; the per-job
-# fields carry a [J] axis per point ([K, J] batched).
-_POINT_NDIM = {"static_job_factors": 1, "job_active": 1}
+# fields carry a [J] axis per point ([K, J] batched) and the phase
+# programs a [J, P] axis pair ([K, J, P] batched).
+_POINT_NDIM = {
+    "static_job_factors": 1, "job_active": 1,
+    "compute": 2, "comm_bytes": 2,
+    "straggle_prob": 1, "iso_iter": 1,
+    "cassini_offset": 1, "cassini_period": 1,
+}
 _FIELD_DTYPE = {"seed": jnp.int32, "job_active": jnp.bool_}
 
 
+def _point_shape(name: str, cfg: SimConfig) -> tuple[int, ...]:
+    """The per-point (unbatched) shape of a sweep field on cfg's fabric."""
+    nd = _POINT_NDIM.get(name, 0)
+    if nd == 0:
+        return ()
+    j, p = cfg.jobs.compute.shape
+    return (j,) if nd == 1 else (j, p)
+
+
+def _unknown_field_error(name: str) -> ValueError:
+    return ValueError(
+        f"unknown sweep field {name!r}: not a SweepParams leaf "
+        f"(it would silently compile per-point instead of riding the "
+        f"batched sweep); valid leaves: {', '.join(SweepParams._fields)}")
+
+
 def sweep_of(cfg: SimConfig) -> SweepParams:
-    """Lift a config's dynamic scalars into an (unbatched) SweepParams."""
+    """Lift a config's dynamic values into an (unbatched) SweepParams."""
     sf = None
     if cfg.static_job_factors is not None:
         sf = jnp.asarray(np.asarray(cfg.static_job_factors), jnp.float32)
+    cas_off = cas_per = cas_eps = None
+    if cfg.cassini is not None:
+        cas_off = jnp.asarray(cfg.cassini.offset, jnp.float32)
+        cas_per = jnp.asarray(cfg.cassini.period, jnp.float32)
+        cas_eps = jnp.asarray(cfg.cassini.eps, jnp.float32)
     p = cfg.protocol
+    jobs = cfg.jobs
     return SweepParams(
         slope=jnp.asarray(p.slope, jnp.float32),
         intercept=jnp.asarray(p.intercept, jnp.float32),
@@ -205,29 +258,42 @@ def sweep_of(cfg: SimConfig) -> SweepParams:
         red_qmax=jnp.asarray(cfg.red_qmax, jnp.float32),
         red_pmax=jnp.asarray(cfg.red_pmax, jnp.float32),
         seed=jnp.asarray(cfg.seed, jnp.int32),
+        compute=jnp.asarray(jobs.compute, jnp.float32),
+        comm_bytes=jnp.asarray(jobs.comm_bytes, jnp.float32),
+        straggle_prob=jnp.asarray(jobs.straggle_prob, jnp.float32),
+        iso_iter=jnp.asarray(jobs.iso_iter_time, jnp.float32),
         static_job_factors=sf,
+        cassini_offset=cas_off,
+        cassini_period=cas_per,
+        cassini_eps=cas_eps,
     )
 
 
 def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
     """Build a batched SweepParams from a config plus per-field overrides.
 
-    Each override is a scalar (held constant) or a length-K sequence (the
-    sweep values); ``static_job_factors`` / ``job_active`` take [J] or
-    [K, J].  All length-K overrides must agree on K; unswept fields are
-    broadcast from the config.
+    Each override is a scalar (held constant — per-job fields broadcast it
+    across the point shape) or a length-K sequence (the sweep values); the
+    per-job fields (``straggle_prob``, ``iso_iter``, ``job_active``,
+    ``static_job_factors``, ``cassini_*``) also take [J] or [K, J], and the
+    phase programs (``compute``, ``comm_bytes``) take [J, P] or [K, J, P].
+    All length-K overrides must agree on K; unswept fields are broadcast
+    from the config.
     """
     base = sweep_of(cfg)
     lens = []
     for name, v in overrides.items():
         if name not in SweepParams._fields:
-            raise ValueError(f"unknown sweep field {name!r}; "
-                             f"choose from {SweepParams._fields}")
+            raise _unknown_field_error(name)
+        nd = _POINT_NDIM.get(name, 0)
         a = np.asarray(v)
-        if a.ndim == _POINT_NDIM.get(name, 0) + 1:
+        if a.ndim == nd + 1:
             lens.append(a.shape[0])
-        elif a.ndim != _POINT_NDIM.get(name, 0):
-            raise ValueError(f"sweep field {name!r} has shape {a.shape}")
+        elif a.ndim not in (0, nd):
+            raise ValueError(
+                f"sweep field {name!r} has shape {a.shape}; expected a "
+                f"scalar, the point shape {_point_shape(name, cfg)}, or a "
+                f"[K]-leading batch of point shapes")
     k = lens[0] if lens else 1
     if any(l != k for l in lens):
         raise ValueError(f"sweep fields disagree on length: {lens}")
@@ -238,7 +304,10 @@ def make_sweep(cfg: SimConfig, **overrides) -> SweepParams:
             out[name] = None
             continue
         a = jnp.asarray(v, _FIELD_DTYPE.get(name, jnp.float32))
-        if a.ndim == _POINT_NDIM.get(name, 0):
+        nd = _POINT_NDIM.get(name, 0)
+        if a.ndim == 0 and nd > 0:
+            a = jnp.broadcast_to(a, _point_shape(name, cfg))
+        if a.ndim == nd:
             a = jnp.broadcast_to(a[None], (k,) + a.shape)
         out[name] = a
     return SweepParams(**out)
@@ -301,10 +370,25 @@ def grid_sweep(cfg: SimConfig, **axes) -> tuple[SweepParams, list[SweepPoint]]:
     instead of relying on positional alignment.
     """
     names = list(axes)
+    for n in names:
+        if n not in SweepParams._fields:
+            raise _unknown_field_error(n)
     grids = np.meshgrid(*[np.asarray(axes[n], np.float64) for n in names],
                         indexing="ij")
     flat = {n: g.reshape(-1) for n, g in zip(names, grids)}
-    sweep = make_sweep(cfg, **flat)
+    # per-job / per-phase fields: each scalar axis label broadcasts to the
+    # point shape, so e.g. straggle_prob=[0.0, 0.1] sweeps a uniform
+    # probability across jobs ([K] labels -> [K, J] values)
+    values = {}
+    for n in names:
+        nd = _POINT_NDIM.get(n, 0)
+        v = flat[n]
+        if nd:
+            pshape = _point_shape(n, cfg)
+            v = np.broadcast_to(v.reshape((-1,) + (1,) * nd),
+                                (v.shape[0],) + pshape)
+        values[n] = v
+    sweep = make_sweep(cfg, **values)
     n_jobs = cfg.jobs.n_jobs
     k = sweep_len(sweep)
     points = [SweepPoint(axes={n: flat[n][i].item() for n in names},
@@ -352,23 +436,22 @@ class EngineState(NamedTuple):
 
 
 class TickStatics(NamedTuple):
-    """Device-resident static arrays used by the tick function."""
+    """Device-resident static arrays used by the tick function.
+
+    Only *structural* data lives here — routing, fan-out, phase counts,
+    start offsets.  The workload values (phase programs, straggle
+    probabilities, Cassini schedules) are traced `SweepParams` leaves and
+    the per-job totals derived from them (`_workload_view`) are computed
+    per sweep point.
+    """
 
     cap: Array            # [M]
     first_link: Array     # [N]
     next_link: Array      # [M+1, N] (M = trash/delivered)
     f2j: Array            # [N]
     spj_inv: Array        # [N] 1/flows-in-job
-    compute: Array        # [J, P]
-    comm_bytes: Array     # [J, P]
     n_phases: Array       # [J]
     start_offset: Array   # [J]
-    straggle_prob: Array  # [J]
-    iso_iter: Array       # [J]
-    job_total_bytes: Array  # [J]
-    period: Array         # [J]
-    cassini_offset: Optional[Array]
-    cassini_period: Optional[Array]
 
 
 def _build_statics(cfg: SimConfig) -> TickStatics:
@@ -384,26 +467,32 @@ def _build_statics(cfg: SimConfig) -> TickStatics:
             nxt[l, n] = path[i + 1] if i + 1 < len(path) else M
     f2j = topo.flow_to_job.astype(np.int32)
     spj = np.bincount(f2j, minlength=jobs.n_jobs).astype(np.float64)
-    period = jobs.compute.sum(1) + jobs.comm_bytes.sum(1) / topo.cap.min()
     return TickStatics(
         cap=jnp.asarray(topo.cap, jnp.float32),
         first_link=jnp.asarray(first_link),
         next_link=jnp.asarray(nxt),
         f2j=jnp.asarray(f2j),
         spj_inv=jnp.asarray(1.0 / spj[f2j], jnp.float32),
-        compute=jnp.asarray(jobs.compute, jnp.float32),
-        comm_bytes=jnp.asarray(jobs.comm_bytes, jnp.float32),
         n_phases=jnp.asarray(jobs.n_phases, jnp.int32),
         start_offset=jnp.asarray(jobs.start_offset, jnp.float32),
-        straggle_prob=jnp.asarray(jobs.straggle_prob, jnp.float32),
-        iso_iter=jnp.asarray(jobs.iso_iter_time, jnp.float32),
-        job_total_bytes=jnp.asarray(jobs.total_bytes, jnp.float32),
-        period=jnp.asarray(period, jnp.float32),
-        cassini_offset=(jnp.asarray(cfg.cassini.offset, jnp.float32)
-                        if cfg.cassini is not None else None),
-        cassini_period=(jnp.asarray(cfg.cassini.period, jnp.float32)
-                        if cfg.cassini is not None else None),
     )
+
+
+class _WorkloadView(NamedTuple):
+    """Per-point values derived from the traced workload leaves."""
+
+    job_total_bytes: Array  # [J] bytes per iteration (Algorithm 1 input)
+    period: Array           # [J] nominal iteration period (normalizer)
+
+
+def _workload_view(cfg: SimConfig, sweep: SweepParams) -> _WorkloadView:
+    total = sweep.comm_bytes.sum(axis=-1)
+    # 1/cap.min() folds to a python float so the division-by-constant is a
+    # reciprocal multiply in every program that computes it (bit-equality
+    # between compile groups; DESIGN.md §4)
+    inv_cap = float(1.0 / np.asarray(cfg.topo.cap, np.float64).min())
+    period = sweep.compute.sum(axis=-1) + total * jnp.float32(inv_cap)
+    return _WorkloadView(job_total_bytes=total, period=period)
 
 
 def _init_state(cfg: SimConfig, statics: TickStatics,
@@ -425,7 +514,7 @@ def _init_state(cfg: SimConfig, statics: TickStatics,
         comm_start=z((N,), jnp.float32),
         phase_idx=z((J,), jnp.int32),
         in_comm=z((J,), bool),
-        t_rem=statics.compute[:, 0],          # start in compute of phase 0
+        t_rem=sweep.compute[:, 0],            # start in compute of phase 0
         iter_idx=z((J,), jnp.int32),
         iter_start=statics.start_offset,
         hold_until=z((J,), jnp.float32),
@@ -485,7 +574,8 @@ def _red_prob(sweep: SweepParams, q: Array) -> Array:
 
 
 def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
-          st: EngineState, _unused) -> tuple[EngineState, None]:
+          wl: _WorkloadView, st: EngineState,
+          _unused) -> tuple[EngineState, None]:
     dt = jnp.float32(cfg.dt)
     t = st.tick.astype(jnp.float32) * dt
     M = cfg.topo.n_links
@@ -507,16 +597,20 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     t_rem = jnp.where(~st.in_comm & started, st.t_rem - dt, st.t_rem)
     compute_done = ~st.in_comm & started & (t_rem <= 0.0)
 
-    if statics.cassini_offset is not None:
+    if sweep.cassini_period is not None:
         # Cassini agent: comm may only start on its slot grid (+/- eps).
-        per = jnp.maximum(statics.cassini_period, 1e-6)
-        k = jnp.ceil((t - statics.cassini_offset) / per)
-        next_slot = statics.cassini_offset + k * per
-        near = jnp.abs(jnp.round((t - statics.cassini_offset) / per) * per
-                       + statics.cassini_offset - t) <= cfg.cassini.eps
-        hold = jnp.where(compute_done & ~near & (st.hold_until <= t),
+        # The schedule is a traced per-job value; period <= 0 disables the
+        # agent for that job (value-identical to the no-Cassini program),
+        # so scheduled and unscheduled plan points share one compile group.
+        on = sweep.cassini_period > 0.0
+        per = jnp.maximum(sweep.cassini_period, 1e-6)
+        k = jnp.ceil((t - sweep.cassini_offset) / per)
+        next_slot = sweep.cassini_offset + k * per
+        near = jnp.abs(jnp.round((t - sweep.cassini_offset) / per) * per
+                       + sweep.cassini_offset - t) <= sweep.cassini_eps
+        hold = jnp.where(compute_done & on & ~near & (st.hold_until <= t),
                          next_slot, st.hold_until)
-        enter_comm = compute_done & (near | (t >= hold))
+        enter_comm = compute_done & (~on | near | (t >= hold))
         hold_until = hold
     else:
         enter_comm = compute_done
@@ -525,7 +619,7 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     in_comm = st.in_comm | enter_comm
 
     # flows of entering jobs pick up their sub-phase quota
-    phase_bytes_job = statics.comm_bytes[jnp.arange(J), st.phase_idx]  # [J]
+    phase_bytes_job = sweep.comm_bytes[jnp.arange(J), st.phase_idx]  # [J]
     enter_f = enter_comm[statics.f2j]
     quota_f = (phase_bytes_job[statics.f2j] * statics.spj_inv)
     to_send = jnp.where(enter_f, quota_f, st.to_send)
@@ -628,13 +722,13 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     iter_idx = st.iter_idx + iter_done.astype(jnp.int32)
     iter_start = jnp.where(iter_done, t, st.iter_start)
 
-    straggles = _lane_uniform(k_strag, J) < statics.straggle_prob
-    strag_amt = (0.05 + 0.05 * _lane_uniform(k_samt, J)) * statics.iso_iter
+    straggles = _lane_uniform(k_strag, J) < sweep.straggle_prob
+    strag_amt = (0.05 + 0.05 * _lane_uniform(k_samt, J)) * sweep.iso_iter
     straggle_extra = jnp.where(iter_done,
                                jnp.where(straggles, strag_amt, 0.0),
                                st.straggle_extra)
 
-    next_compute = statics.compute[jnp.arange(J), phase_idx]
+    next_compute = sweep.compute[jnp.arange(J), phase_idx]
     t_rem = jnp.where(comm_done,
                       next_compute + jnp.where(iter_done, straggle_extra, 0.0),
                       t_rem)
@@ -645,12 +739,12 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     fb = core.Feedback(num_acks=fb_del / mss, loss=fb_loss, cnp=fb_cnp, now=t)
     flow_total = jnp.where(
         jnp.asarray(cfg.protocol.aggregate_by_job),
-        statics.job_total_bytes[statics.f2j],
-        statics.job_total_bytes[statics.f2j] * statics.spj_inv)
-    comm_elapsed = jnp.clip((t - comm_start) / statics.period[statics.f2j],
+        wl.job_total_bytes[statics.f2j],
+        wl.job_total_bytes[statics.f2j] * statics.spj_inv)
+    comm_elapsed = jnp.clip((t - comm_start) / wl.period[statics.f2j],
                             0.0, 1.0)
     est_finish = jnp.clip(to_deliver / jnp.maximum(rate, 1.0)
-                          / statics.period[statics.f2j], 0.0, 1.0)
+                          / wl.period[statics.f2j], 0.0, 1.0)
 
     # the kernel path takes the same traced DynamicParams as the oracle:
     # protocol scalars are operands of the fused kernel (DESIGN.md §4), so
@@ -722,7 +816,7 @@ def _run_single(cfg: SimConfig, statics: TickStatics,
     st = _init_state(cfg, statics, sweep)
     ticks_per_chunk = max(1, cfg.n_ticks // cfg.n_chunks)
     n_chunks = cfg.n_ticks // ticks_per_chunk
-    tick = partial(_tick, cfg, statics, sweep)
+    tick = partial(_tick, cfg, statics, sweep, _workload_view(cfg, sweep))
 
     def chunk(st: EngineState, _):
         st = st._replace(acc_util=jnp.zeros_like(st.acc_util),
@@ -788,6 +882,10 @@ def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
             raise ValueError(
                 f"sweep field {name!r} has shape {v.shape}; expected a "
                 f"leading sweep axis of length {k} (use make_sweep)")
+    cas = (sweep.cassini_offset, sweep.cassini_period, sweep.cassini_eps)
+    if any(c is not None for c in cas) and any(c is None for c in cas):
+        raise ValueError("cassini_offset / cassini_period / cassini_eps "
+                         "must be set together (or all None)")
     return _run_sweep(cfg, sweep)
 
 

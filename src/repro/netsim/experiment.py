@@ -25,12 +25,15 @@ and `run_plan` does the partitioning (DESIGN.md §5):
   1. enumerate the cartesian product of the axes (minus `where`-filtered
      points) and build each point's `SimConfig`;
   2. group points by *static signature* — the config with every dynamic
-     field canonicalized — so points that only differ dynamically share one
-     compile group;
-  3. merge groups that differ only in workload size: if a point's
-     (topology, jobs) equal the *restriction* of a larger point's to its
-     first n jobs, the smaller point runs on the larger fabric with a
-     `job_active` mask (the padded-jobs axis), joining its compile group;
+     field canonicalized, workload *values* (phase programs, straggle
+     probabilities, Cassini schedules, Static factors) included — so
+     points that only differ dynamically share one compile group;
+  3. merge groups that differ only in workload *shape*: if a point's
+     (topology, job structure) equal the *restriction* of a larger
+     point's to its first n jobs, the smaller point runs on the larger
+     fabric with a `job_active` mask (the padded-jobs axis), joining its
+     compile group; phase programs are column-padded to the group's
+     P_max (zero columns are inert under the `n_phases` mask);
   4. lower each group's points onto the `simulate_sweep` K axis — one
      trace, one compile, K simulations per group — optionally sharding K
      across local devices;
@@ -38,11 +41,20 @@ and `run_plan` does the partitioning (DESIGN.md §5):
      `SweepPoint`, so every `SimResult` names its axis coordinates.
 
 A Fig. 10-style plan (7 job counts x 3 seeds x {OFF, WI}) thus compiles
-*two* programs (one per variant) instead of 14+.
+*two* programs (one per variant) instead of 14+, and the straggler /
+partial-compat grids (which sweep workload values) collapse the same way.
+
+``run_plan(..., cache_dir=...)`` adds a SweepPoint-keyed on-disk cache:
+each point's result is stored under a content hash of its full config and
+resolved dynamic overrides, so interrupted benchmark runs resume and
+figures re-aggregate without re-simulating.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import pickle
 from typing import Callable, Optional
 
 import jax
@@ -211,27 +223,44 @@ def _flows_are_job_prefix(topo: Topology, n_jobs: int) -> bool:
 # Static signatures & compile groups
 # ---------------------------------------------------------------------------
 
-# Marker standing in for "Static-baseline factors present" in signatures:
-# the factor *values* are dynamic (they ride the sweep), but their presence
-# is structural (it changes the traced program).
-_FACTORS_PRESENT = np.asarray([1.0])
+def _canonical_jobs(jobs: JobSpec) -> JobSpec:
+    """The job structure with every traced workload value zeroed.
+
+    Phase-program values, straggle probabilities and isolation times ride
+    the sweep (`SweepParams.compute` / `comm_bytes` / `straggle_prob` /
+    `iso_iter`); only the array shapes, `n_phases` and `start_offset`
+    remain structural.
+    """
+    return JobSpec(compute=np.zeros_like(jobs.compute),
+                   comm_bytes=np.zeros_like(jobs.comm_bytes),
+                   n_phases=jobs.n_phases,
+                   start_offset=jobs.start_offset,
+                   straggle_prob=np.zeros_like(jobs.straggle_prob),
+                   iso_iter_time=np.zeros_like(jobs.iso_iter_time))
 
 
 def _canonical_cfg(cfg: SimConfig) -> SimConfig:
     """The config with every dynamic field pinned to a canonical value.
 
     Two points share a compile group iff their canonical configs are equal
-    (after workload merging); using the canonical config as the jit static
-    argument also means re-running a plan with different seeds or scalars
-    hits the exact same jit cache entry.
+    (after workload-shape merging); using the canonical config as the jit
+    static argument also means re-running a plan with different seeds,
+    scalars or workload values hits the exact same jit cache entry.
+
+    The Static factors and the Cassini schedule canonicalize to None —
+    their values are `SweepParams` leaves and their *presence* is
+    normalized per group at lowering time (`_point_params`): a point
+    without factors gets the all-negative "adaptive" sentinel, a point
+    without a schedule gets all-zero periods (per-job off), both exact
+    value-level no-ops in the traced program.
     """
     proto = dataclasses.replace(cfg.protocol, slope=0.0, intercept=0.0,
                                 g=0.0, gamma=0.0, init_comm_gap=0.0)
     return dataclasses.replace(
         cfg, protocol=proto, seed=0,
         red_qmin=0.0, red_qmax=1.0, red_pmax=0.0,
-        static_job_factors=(None if cfg.static_job_factors is None
-                            else _FACTORS_PRESENT))
+        jobs=_canonical_jobs(cfg.jobs),
+        static_job_factors=None, cassini=None)
 
 
 def _no_workload(cfg: SimConfig) -> SimConfig:
@@ -242,37 +271,84 @@ def _fabric_key(topo: Topology):
     return (topo.names, topo.cap.tobytes())
 
 
+def _factors_need_split(cfg: SimConfig) -> bool:
+    """True when Static-factor presence may not be mixed in one group.
+
+    The fused kernel's adaptive branch (which sentinel factor entries
+    select) implements only the default linear F over largest_data_sent;
+    under any other structural option a kernel-enabled group must keep
+    factor-bearing and adaptive points apart so no sentinel ever reaches
+    the kernel (pure-Static groups stay fused — all entries >= 0 mask the
+    branch exactly).  The jnp oracle computes the true adaptive F, so
+    non-kernel configs always mix.
+    """
+    return cfg.use_pallas_kernel and (
+        cfg.protocol.f_spec != "linear"
+        or cfg.protocol.favoritism != "largest_data_sent")
+
+
 @dataclasses.dataclass
 class _Group:
     """One compile group: a shared static config + its member points."""
 
-    cfg: SimConfig               # canonical static config (largest fabric)
+    cfg: SimConfig               # canonical static config (largest fabric,
+    #                              phase programs padded to the group P_max)
     idxs: list[int]              # plan-point indices, in plan order
     masked: bool                 # True iff job_active masks are needed
+    factors: bool = False        # some member carries Static factors
+    cassini: bool = False        # some member carries a Cassini schedule
+
+
+def _pad_group_jobs(jobs: JobSpec, p_max: int) -> JobSpec:
+    if jobs.compute.shape[1] >= p_max:
+        return jobs
+    return JobSpec(compute=_pad_cols(jobs.compute, p_max, 0.0),
+                   comm_bytes=_pad_cols(jobs.comm_bytes, p_max, 0.0),
+                   n_phases=jobs.n_phases,
+                   start_offset=jobs.start_offset,
+                   straggle_prob=jobs.straggle_prob,
+                   iso_iter_time=jobs.iso_iter_time)
+
+
+def _finish_group(cfgs: list[SimConfig], cfg_g: SimConfig,
+                  members: list[int], masked: bool) -> _Group:
+    p_max = max(cfgs[i].jobs.compute.shape[1] for i in members)
+    if cfg_g.jobs.compute.shape[1] < p_max:
+        cfg_g = dataclasses.replace(
+            cfg_g, jobs=_pad_group_jobs(cfg_g.jobs, p_max))
+    return _Group(cfg=cfg_g, idxs=sorted(members), masked=masked,
+                  factors=any(cfgs[i].static_job_factors is not None
+                              for i in members),
+                  cassini=any(cfgs[i].cassini is not None for i in members))
 
 
 def _compile_groups(cfgs: list[SimConfig], pad_jobs: bool) -> list[_Group]:
     canon = [_canonical_cfg(c) for c in cfgs]
-    # Bucket by everything except the workload; points whose workloads can't
-    # merge (Cassini schedules are [J]-shaped static arrays) stay exact.
+    # Bucket by everything except the workload, then merge by workload
+    # *shape* (the canonical jobs' zeroed values make `_same_workload` a
+    # structural comparison).  Factor presence joins the key only when the
+    # kernel cannot take the adaptive sentinel (_factors_need_split).
     buckets: dict = {}
     for i, c in enumerate(canon):
-        if pad_jobs and c.cassini is None:
-            key = ("pad", _no_workload(c), _fabric_key(c.topo))
+        fp = (cfgs[i].static_job_factors is not None
+              if _factors_need_split(c) else None)
+        if pad_jobs:
+            key = ("pad", _no_workload(c), _fabric_key(c.topo), fp)
         else:
-            key = ("exact", c)
+            key = ("exact", c, fp)
         buckets.setdefault(key, []).append(i)
 
     groups: list[_Group] = []
     for key, idxs in buckets.items():
         if key[0] == "exact":
-            groups.append(_Group(cfg=canon[idxs[0]], idxs=idxs, masked=False))
+            groups.append(_finish_group(cfgs, canon[idxs[0]], idxs,
+                                        masked=False))
             continue
         remaining = list(idxs)
         while remaining:
             ref = max(remaining,
                       key=lambda i: (cfgs[i].jobs.n_jobs, cfgs[i].topo.n_flows))
-            ref_topo, ref_jobs = cfgs[ref].topo, cfgs[ref].jobs
+            ref_topo, ref_jobs = cfgs[ref].topo, canon[ref].jobs
             members, rest = [], []
             for i in remaining:
                 n = cfgs[i].jobs.n_jobs
@@ -280,14 +356,13 @@ def _compile_groups(cfgs: list[SimConfig], pad_jobs: bool) -> list[_Group]:
                         and _flows_are_job_prefix(ref_topo, n)
                         and _same_workload(*restrict_workload(ref_topo,
                                                               ref_jobs, n),
-                                           cfgs[i].topo, cfgs[i].jobs)):
+                                           cfgs[i].topo, canon[i].jobs)):
                     members.append(i)
                 else:
                     rest.append(i)
             masked = any(cfgs[i].jobs.n_jobs < ref_jobs.n_jobs
                          for i in members)
-            groups.append(_Group(cfg=canon[ref], idxs=sorted(members),
-                                 masked=masked))
+            groups.append(_finish_group(cfgs, canon[ref], members, masked))
             remaining = rest
     # deterministic group order: by first member point
     groups.sort(key=lambda g: g.idxs[0])
@@ -298,21 +373,65 @@ def _compile_groups(cfgs: list[SimConfig], pad_jobs: bool) -> list[_Group]:
 # Lowering a group onto the sweep axis
 # ---------------------------------------------------------------------------
 
+def _pad_rows(x: np.ndarray, j: int, fill) -> np.ndarray:
+    if x.shape[0] >= j:
+        return x
+    pad = np.full((j - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
 def _point_params(cfg: SimConfig, overrides: dict, group: _Group) -> SweepParams:
-    """Resolve one point's unbatched SweepParams on the group's fabric."""
-    from repro.netsim.engine import _FIELD_DTYPE  # single source of dtypes
+    """Resolve one point's unbatched SweepParams on the group's fabric.
+
+    Scalar overrides of per-job fields broadcast across the point's own
+    jobs; the workload leaves are then padded to the group's [J_ref, P_max]
+    shape (zero rows for masked-off jobs, zero columns beyond `n_phases`);
+    Static-factor / Cassini presence is normalized group-wide with exact
+    value-level no-ops (the adaptive sentinel, zero periods).
+    """
+    from repro.netsim.engine import (  # single source of dtypes/shapes
+        _FIELD_DTYPE,
+        _point_shape,
+    )
 
     params = sweep_of(cfg)
     for field, value in overrides.items():
         dtype = _FIELD_DTYPE.get(field, jnp.float32)
-        params = params._replace(**{field: jnp.asarray(value, dtype)})
+        a = np.asarray(value)
+        shape = _point_shape(field, cfg)
+        if a.ndim < len(shape):
+            a = np.broadcast_to(a, shape)
+        params = params._replace(**{field: jnp.asarray(a, dtype)})
     j_ref = group.cfg.jobs.n_jobs
+    p_max = group.cfg.jobs.compute.shape[1]
     n = cfg.jobs.n_jobs
-    if params.static_job_factors is not None:
-        f = np.asarray(params.static_job_factors, np.float32)
-        if f.shape[0] < j_ref:     # pad with neutral factors for masked jobs
-            f = np.concatenate([f, np.ones((j_ref - f.shape[0],), np.float32)])
-        params = params._replace(static_job_factors=jnp.asarray(f))
+
+    def pad(x, fill=0.0, cols=False):
+        x = np.asarray(x, np.float32)
+        if cols:
+            x = _pad_cols(x, p_max, 0.0)
+        return jnp.asarray(_pad_rows(x, j_ref, fill))
+
+    params = params._replace(
+        compute=pad(params.compute, cols=True),
+        comm_bytes=pad(params.comm_bytes, cols=True),
+        straggle_prob=pad(params.straggle_prob),
+        iso_iter=pad(params.iso_iter),
+    )
+    if group.factors:
+        f = params.static_job_factors
+        f = (np.full((n,), -1.0, np.float32) if f is None  # adaptive sentinel
+             else np.asarray(f, np.float32))
+        params = params._replace(static_job_factors=pad(f, fill=1.0))
+    if group.cassini:
+        off = params.cassini_offset
+        per = params.cassini_period
+        eps = params.cassini_eps
+        off = np.zeros((n,), np.float32) if off is None else np.asarray(off)
+        per = np.zeros((n,), np.float32) if per is None else np.asarray(per)
+        params = params._replace(
+            cassini_offset=pad(off), cassini_period=pad(per),
+            cassini_eps=jnp.asarray(0.0 if eps is None else eps, jnp.float32))
     if params.job_active is not None:
         m = np.asarray(params.job_active, bool)
         if m.shape[0] < j_ref:     # caller mask on the point's own fabric
@@ -391,6 +510,9 @@ class PlanResult:
     # groups are already in the jit cache reports 0 — read it off the first
     # run of a given static config.
     n_kernel_fallbacks: int = 0
+    # points served from run_plan's cache_dir (0 without a cache);
+    # n_compile_groups counts only the groups actually simulated.
+    n_cache_hits: int = 0
 
     def __len__(self) -> int:
         return len(self.results)
@@ -424,6 +546,79 @@ class PlanResult:
 
 
 # ---------------------------------------------------------------------------
+# On-disk point cache (resumable benchmark runs)
+# ---------------------------------------------------------------------------
+
+def _stable_bytes(obj, out: list) -> None:
+    """Deterministic byte serialization for cache keys (hash() is salted
+    per process, so HashableConfig hashes cannot key an on-disk cache)."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        out.append(repr(obj).encode())
+    elif isinstance(obj, float):
+        out.append(np.float64(obj).tobytes())
+    elif isinstance(obj, np.ndarray):
+        out.append(f"nd{obj.dtype}{obj.shape}".encode())
+        out.append(np.ascontiguousarray(obj).tobytes())
+    elif isinstance(obj, (list, tuple)):
+        out.append(f"seq{len(obj)}".encode())
+        for v in obj:
+            _stable_bytes(v, out)
+    elif isinstance(obj, dict):
+        out.append(f"map{len(obj)}".encode())
+        for k in sorted(obj):
+            _stable_bytes(k, out)
+            _stable_bytes(obj[k], out)
+    elif dataclasses.is_dataclass(obj):
+        out.append(type(obj).__name__.encode())
+        for f in dataclasses.fields(obj):
+            _stable_bytes(f.name, out)
+            _stable_bytes(getattr(obj, f.name), out)
+    else:
+        _stable_bytes(np.asarray(obj), out)
+
+
+def _point_cache_key(cfg: SimConfig, overrides: dict) -> str:
+    """Content hash of everything that determines one point's result: the
+    point's full (uncanonicalized) config plus its resolved dynamic
+    overrides.  Deliberately *not* a function of the group the point lands
+    in — padded lowering is value-identical to unpadded (DESIGN.md §5), so
+    cached results survive regrouping (new axis values, pad_jobs toggles).
+    """
+    out: list = [b"repro-plan-cache-v1"]
+    _stable_bytes(cfg, out)
+    _stable_bytes({k: np.asarray(v) for k, v in overrides.items()}, out)
+    return hashlib.sha256(b"".join(out)).hexdigest()[:32]
+
+
+def _cache_path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"{key}.pkl")
+
+
+def _cache_load(cache_dir: str, key: str) -> Optional[metrics.SimResult]:
+    path = _cache_path(cache_dir, key)
+    try:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    except (OSError, pickle.UnpicklingError, EOFError, AttributeError):
+        return None         # missing or unreadable: just re-simulate
+
+
+def _cache_save(cache_dir: str, key: str, res: metrics.SimResult) -> None:
+    # numpy-normalize the attached params so unpickling never needs a
+    # live JAX device context
+    if res.point is not None and res.point.params is not None:
+        res = dataclasses.replace(
+            res, point=dataclasses.replace(
+                res.point, params=jax.tree_util.tree_map(
+                    np.asarray, res.point.params)))
+    path = _cache_path(cache_dir, key)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(res, f)
+    os.replace(tmp, path)   # atomic: a crash never leaves a torn entry
+
+
+# ---------------------------------------------------------------------------
 # The runner
 # ---------------------------------------------------------------------------
 
@@ -436,13 +631,20 @@ def _kernel_fallback_count() -> int:
     return getattr(mod, "FALLBACK_COUNT", 0) if mod is not None else 0
 
 
-def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
+def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
+             cache_dir: Optional[str] = None) -> PlanResult:
     """Execute a plan: one `simulate_sweep` per compile group.
 
-    shard:    "auto" | True | False — lay each group's K axis across local
-              devices (see `_shard_sweep`).
-    pad_jobs: merge workload-size variants into one padded + masked compile
-              group where possible (disable to force exact grouping).
+    shard:     "auto" | True | False — lay each group's K axis across local
+               devices (see `_shard_sweep`).
+    pad_jobs:  merge workload-size variants into one padded + masked compile
+               group where possible (disable to force exact grouping).
+    cache_dir: if given, a directory of per-point result pickles keyed by a
+               content hash of (point config, resolved overrides).  Points
+               already present are served from disk and *excluded* from
+               compile-group formation; fresh points are written back after
+               postprocessing.  Interrupted plans resume where they stopped,
+               and grown plans only simulate the new cells.
     """
     points = plan.points()
     cfgs = [plan.build(dict(pt)) for pt in points]
@@ -459,23 +661,36 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True) -> PlanResult:
             ov[ax.target] = ax.resolve(v) if ax.resolve is not None else v
         overrides.append(ov)
 
-    groups = _compile_groups(cfgs, pad_jobs)
     results: list[Optional[metrics.SimResult]] = [None] * len(points)
+    keys: list[Optional[str]] = [None] * len(points)
+    if cache_dir is not None:
+        os.makedirs(cache_dir, exist_ok=True)
+        for i in range(len(points)):
+            keys[i] = _point_cache_key(cfgs[i], overrides[i])
+            results[i] = _cache_load(cache_dir, keys[i])
+    n_cache_hits = sum(r is not None for r in results)
+    todo = [i for i in range(len(points)) if results[i] is None]
+
+    groups = _compile_groups([cfgs[i] for i in todo], pad_jobs)
     fallbacks_before = _kernel_fallback_count()
     for group in groups:
+        idxs = [todo[j] for j in group.idxs]   # group indexes the todo subset
         per_point = [_point_params(cfgs[i], overrides[i], group)
-                     for i in group.idxs]
+                     for i in idxs]
         sweep = _stack_params(per_point)
-        k = len(group.idxs)
+        k = len(idxs)
         sweep, _ = _shard_sweep(sweep, k, shard)
         raw = simulate_sweep(group.cfg, sweep)
-        for slot, i in enumerate(group.idxs):
+        for slot, i in enumerate(idxs):
             point = SweepPoint(axes=dict(points[i]), params=per_point[slot],
                                n_jobs=cfgs[i].jobs.n_jobs)
             raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s], raw)
             results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
                                              n_jobs=point.n_jobs)
+            if cache_dir is not None:
+                _cache_save(cache_dir, keys[i], results[i])
     return PlanResult(plan=plan, results=results,
                       n_compile_groups=len(groups),
                       n_kernel_fallbacks=(_kernel_fallback_count()
-                                          - fallbacks_before))
+                                          - fallbacks_before),
+                      n_cache_hits=n_cache_hits)

@@ -53,6 +53,14 @@ class CommProfile:
             comm_bytes=tuple(b * factor for b in self.comm_bytes),
         )
 
+    def compute_scaled(self, factor: float) -> "CommProfile":
+        """Scale only the compute phases (comm bytes fixed) — varies the
+        compute:comm duty ratio, i.e. the partial-compatibility axis.  The
+        result keeps the phase *structure*, so a plan sweeping this factor
+        changes only traced workload values and stays one compile group."""
+        return dataclasses.replace(
+            self, compute_s=tuple(c * factor for c in self.compute_s))
+
 
 def dp_allreduce_bytes(param_count: float, n_workers: int,
                        bytes_per_param: float = 4.0) -> float:

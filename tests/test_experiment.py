@@ -105,20 +105,71 @@ def test_pad_jobs_off_forces_exact_groups():
     assert pr.n_compile_groups == 2
 
 
-def test_mismatched_workloads_do_not_merge():
-    """Points whose jobs are not a restriction of the largest fabric keep
-    their own compile group (different per-job programs)."""
+def test_mismatched_workload_structure_does_not_merge():
+    """Points whose jobs differ *structurally* (start offsets, phase counts)
+    keep their own compile group — only workload values are traced."""
     def build(pt):
         n = pt["n_jobs"]
-        compute = [0.0075] * n if n == 3 else [0.009] * n   # different jobs
+        offs = [0.002] * n if n == 3 else None      # structural difference
         topo = netsim.dumbbell(n, sockets_per_job=2)
-        jobs = netsim.JobSpec.simple(compute, [25e6] * n)
+        jobs = netsim.JobSpec.simple([0.0075] * n, [25e6] * n,
+                                     start_offset=offs)
         return netsim.SimConfig(topo=topo, jobs=jobs, protocol=_proto(),
                                 sim_time=0.1, dt=DT, seed=0)
     pr = netsim.run_plan(netsim.Plan(
         name="mismatch", build=build,
         axes=(netsim.Axis("n_jobs", (2, 3)),)), shard=False)
     assert pr.n_compile_groups == 2
+
+
+def test_workload_values_merge_into_one_group():
+    """Jobs differing only in compute/comm/straggle *values* are traced
+    leaves now: one compile group, results bit-equal to exact grouping."""
+    def build(pt):
+        n = pt["n_jobs"]
+        compute = [0.0075] * n if n == 3 else [0.009] * n   # value-only diff
+        topo = netsim.dumbbell(n, sockets_per_job=2)
+        jobs = netsim.JobSpec.simple(compute, [25e6] * n,
+                                     straggle_prob=[0.05 * (n == 3)] * n)
+        return netsim.SimConfig(topo=topo, jobs=jobs, protocol=_proto(),
+                                sim_time=0.1, dt=DT, seed=0)
+    plan = netsim.Plan(name="value-merge", build=build,
+                       axes=(netsim.Axis("n_jobs", (2, 3)),))
+    before = engine.TRACE_COUNT
+    pr = netsim.run_plan(plan, shard=False)
+    assert pr.n_compile_groups == 1
+    assert engine.TRACE_COUNT == before + 1
+    # bit-identical to per-cell compilation
+    pr_exact = netsim.run_plan(plan, shard=False, pad_jobs=False)
+    assert pr_exact.n_compile_groups == 2
+    for a, b in zip(pr, pr_exact):
+        assert a.point.axes == b.point.axes
+        for ja, jb in zip(a.iter_times, b.iter_times):
+            assert np.array_equal(ja, jb)
+
+
+def test_run_plan_cache_resumes(tmp_path):
+    """Satellite: SweepPoint-keyed on-disk cache makes plans resumable —
+    second run is all hits, a deleted entry re-simulates just that point,
+    and cached results are bit-identical to fresh ones."""
+    cache = str(tmp_path / "plan-cache")
+    plan = _jobs_plan(job_counts=(2, 3), seeds=(0, 1), sim_time=0.1,
+                      name="cached")
+    fresh = netsim.run_plan(plan, shard=False, cache_dir=cache)
+    assert fresh.n_cache_hits == 0 and fresh.n_compile_groups == 1
+    rerun = netsim.run_plan(plan, shard=False, cache_dir=cache)
+    assert rerun.n_cache_hits == len(rerun)
+    assert rerun.n_compile_groups == 0          # nothing left to simulate
+    for a, b in zip(fresh, rerun):
+        assert a.point.axes == b.point.axes
+        for ja, jb in zip(a.iter_times, b.iter_times):
+            assert np.array_equal(ja, jb)
+    # drop one entry -> exactly one point re-simulates
+    victims = sorted((tmp_path / "plan-cache").glob("*.pkl"))
+    victims[0].unlink()
+    partial = netsim.run_plan(plan, shard=False, cache_dir=cache)
+    assert partial.n_cache_hits == len(partial) - 1
+    assert partial.n_compile_groups == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,172 @@
+"""The workload sweep axis — phase programs and straggle probabilities as
+traced SweepParams leaves.
+
+The contract: workload *values* are operands, not compile-time constants —
+zero-padded [J, P_max] phase programs run bit-identically to their unpadded
+originals (the padding invariant compile-group merging relies on), traced
+straggle probabilities reproduce the old static-JobSpec path exactly on
+every base CC algorithm, and a workload-batched sweep keeps the fused
+Pallas kernel engaged (no silent oracle fallback).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.core import Algo, CCParams, MLTCPConfig, Variant
+
+DT = 2e-5
+
+
+def _proto(algo=Algo.RENO, variant=Variant.WI, **kw):
+    return MLTCPConfig(cc=CCParams(algo=int(algo), variant=int(variant),
+                                   tick_dt=DT, rtt=100e-6),
+                       slope=1.75, intercept=0.25, **kw)
+
+
+def _cfg(n_jobs=2, sim_time=0.3, seed=3, straggle_prob=None, **kw):
+    topo = netsim.dumbbell(n_jobs, sockets_per_job=2)
+    jobs = netsim.JobSpec.simple([0.0075] * n_jobs, [25e6] * n_jobs,
+                                 straggle_prob=straggle_prob)
+    return netsim.SimConfig(topo=topo, jobs=jobs,
+                            protocol=kw.pop("protocol", _proto()),
+                            sim_time=sim_time, dt=DT, seed=seed, **kw)
+
+
+def _tree_equal(a, b) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return len(leaves_a) == len(leaves_b) and all(
+        np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(leaves_a, leaves_b))
+
+
+def _pad_phase_columns(cfg, p_max: int):
+    """cfg with its [J, P] phase programs zero-padded to [J, p_max]."""
+    jobs = cfg.jobs
+    j, p = jobs.compute.shape
+    assert p_max >= p
+    pad = ((0, 0), (0, p_max - p))
+    return dataclasses.replace(cfg, jobs=dataclasses.replace(
+        jobs,
+        compute=np.pad(jobs.compute, pad),
+        comm_bytes=np.pad(jobs.comm_bytes, pad)))
+
+
+# ---------------------------------------------------------------------------
+# The P_max padding invariant
+# ---------------------------------------------------------------------------
+
+def test_padded_phase_columns_bit_equal():
+    """Zero phase columns beyond n_phases are inert: a [J, 3]-padded program
+    is bit-identical to the [J, 1] original.  Compile-group merging pads
+    members to a shared P_max, so this must hold exactly, not to tolerance.
+    """
+    cfg = _cfg()
+    raw = netsim.simulate(cfg)
+    raw_pad = netsim.simulate(_pad_phase_columns(cfg, 3))
+    assert _tree_equal(raw, raw_pad)
+
+
+def test_padded_columns_bit_equal_with_straggle_and_cassini():
+    """The invariant holds with the straggler RNG and Cassini hold logic in
+    the loop (both consume workload leaves)."""
+    sched = netsim.CassiniSchedule(offset=np.asarray([0.0, 0.004]),
+                                   period=np.asarray([0.012, 0.012]))
+    cfg = _cfg(straggle_prob=[0.2, 0.2], cassini=sched)
+    raw = netsim.simulate(cfg)
+    raw_pad = netsim.simulate(_pad_phase_columns(cfg, 4))
+    assert _tree_equal(raw, raw_pad)
+
+
+# ---------------------------------------------------------------------------
+# Traced workload values == old static-JobSpec path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", [Algo.RENO, Algo.CUBIC, Algo.DCQCN])
+def test_traced_straggle_prob_matches_static_path(algo):
+    """Overriding straggle_prob as a sweep leaf is bit-identical to baking
+    the same probability into the JobSpec."""
+    static = _cfg(straggle_prob=[0.2, 0.2], protocol=_proto(algo=algo))
+    raw_static = netsim.simulate(static)
+    clean = _cfg(protocol=_proto(algo=algo))
+    sweep = netsim.make_sweep(clean, straggle_prob=0.2)   # scalar -> [J]
+    raw_traced = jax.tree_util.tree_map(
+        lambda x: x[0], netsim.simulate_sweep(clean, sweep))
+    assert _tree_equal(raw_static, raw_traced)
+
+
+def test_traced_phase_program_matches_static_path():
+    """Overriding compute/comm_bytes as sweep leaves is bit-identical to a
+    config built with those values (the compile-group merge contract)."""
+    slow = _cfg()
+    fast_jobs = netsim.JobSpec.simple([0.009, 0.009], [20e6, 20e6])
+    fast = dataclasses.replace(slow, jobs=fast_jobs)
+    raw_fast = netsim.simulate(fast)
+    sweep = netsim.make_sweep(
+        slow,
+        compute=np.asarray(fast_jobs.compute, np.float32),
+        comm_bytes=np.asarray(fast_jobs.comm_bytes, np.float32),
+        iso_iter=np.asarray(fast_jobs.iso_iter_time, np.float32))
+    raw_traced = jax.tree_util.tree_map(
+        lambda x: x[0], netsim.simulate_sweep(slow, sweep))
+    assert _tree_equal(raw_fast, raw_traced)
+
+
+def test_grid_sweep_broadcasts_scalar_straggle_axis():
+    """grid_sweep labels stay scalars while per-job fields broadcast to
+    [K, J] values."""
+    cfg = _cfg()
+    sweep, points = netsim.grid_sweep(cfg, straggle_prob=[0.0, 0.1, 0.3])
+    assert sweep.straggle_prob.shape == (3, 2)
+    assert [p["straggle_prob"] for p in points] == [0.0, 0.1, 0.3]
+    np.testing.assert_array_equal(
+        np.asarray(sweep.straggle_prob),
+        np.asarray([[0.0, 0.0], [0.1, 0.1], [0.3, 0.3]], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Error surface (satellite: clear non-leaf errors)
+# ---------------------------------------------------------------------------
+
+def test_make_sweep_rejects_non_leaf_fields():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="unknown sweep field"):
+        netsim.make_sweep(cfg, n_phases=[1, 2])
+    with pytest.raises(ValueError, match="valid leaves.*straggle_prob"):
+        netsim.make_sweep(cfg, straggle=[0.1])
+    with pytest.raises(ValueError, match="valid leaves"):
+        netsim.grid_sweep(cfg, start_offset=[0.0, 0.1])
+    with pytest.raises(ValueError, match="expected a scalar"):
+        netsim.make_sweep(cfg, straggle_prob=np.zeros((2, 2, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Kernel fuzz: workload-batched sweeps stay on the fused kernel
+# ---------------------------------------------------------------------------
+
+def test_workload_batched_kernel_sweep_stays_fused():
+    """A sweep batching compute scale, comm bytes, and straggle probability
+    runs the fused kernel without a single oracle fallback and bit-matches
+    the pure-jnp oracle."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    cfg_o = _cfg(sim_time=0.2)
+    j, p = cfg_o.jobs.compute.shape
+    k = 4
+    compute = (np.asarray(cfg_o.jobs.compute, np.float32)[None] *
+               rng.uniform(0.5, 1.5, (k, 1, 1)).astype(np.float32))
+    comm = (np.asarray(cfg_o.jobs.comm_bytes, np.float32)[None] *
+            rng.uniform(0.8, 1.2, (k, 1, 1)).astype(np.float32))
+    probs = rng.uniform(0.0, 0.3, (k, j)).astype(np.float32)
+    over = dict(compute=compute, comm_bytes=comm, straggle_prob=probs)
+
+    raw_o = netsim.simulate_sweep(cfg_o, netsim.make_sweep(cfg_o, **over))
+    cfg_k = dataclasses.replace(cfg_o, use_pallas_kernel=True)
+    before = ops.FALLBACK_COUNT
+    raw_k = netsim.simulate_sweep(cfg_k, netsim.make_sweep(cfg_k, **over))
+    assert ops.FALLBACK_COUNT == before          # stayed fused
+    assert _tree_equal(raw_o, raw_k)
