@@ -100,9 +100,30 @@ def plan(build, *, name: str = "", where=None, **axes) -> netsim.Plan:
                        where=where)
 
 
-def run_plan(p: netsim.Plan) -> netsim.PlanResult:
-    """Execute a plan (thin wrapper so suites share one entry point)."""
-    return netsim.run_plan(p)
+# Per-suite fusion/cache health, accumulated across every plan a suite runs
+# (suites may run several); `timed` resets it per benchmark and attaches the
+# totals to the BenchResult so run.py can print + merge them.
+_PLAN_HEALTH = {"n_kernel_fallbacks": 0, "n_cache_hits": 0,
+                "n_compile_groups": 0}
+
+
+def reset_plan_health() -> None:
+    for k in _PLAN_HEALTH:
+        _PLAN_HEALTH[k] = 0
+
+
+def plan_health() -> dict:
+    return dict(_PLAN_HEALTH)
+
+
+def run_plan(p: netsim.Plan, **kw) -> netsim.PlanResult:
+    """Execute a plan (thin wrapper so suites share one entry point and
+    their fusion/cache health aggregates per suite)."""
+    pr = netsim.run_plan(p, **kw)
+    _PLAN_HEALTH["n_kernel_fallbacks"] += pr.n_kernel_fallbacks
+    _PLAN_HEALTH["n_cache_hits"] += pr.n_cache_hits
+    _PLAN_HEALTH["n_compile_groups"] += pr.n_compile_groups
+    return pr
 
 
 def seed_axis(seeds=None) -> netsim.Axis:
@@ -153,17 +174,25 @@ class BenchResult:
     wall_s: float
     n_ticks: int
     derived: dict
+    # fusion/cache health over every plan the suite ran (plan_health())
+    health: dict = dataclasses.field(default_factory=dict)
 
     def csv_line(self) -> str:
         us = 1e6 * self.wall_s / max(self.n_ticks, 1)
         key, val = next(iter(self.derived.items()))
-        return f"{self.name},{us:.3f},{key}={val}"
+        line = f"{self.name},{us:.3f},{key}={val}"
+        if self.health:
+            line += (f",fallbacks={self.health.get('n_kernel_fallbacks', 0)}"
+                     f",cache_hits={self.health.get('n_cache_hits', 0)}")
+        return line
 
 
 def timed(name: str, fn) -> BenchResult:
+    reset_plan_health()
     t0 = time.time()
     derived, n_ticks = fn()
-    return BenchResult(name, time.time() - t0, n_ticks, derived)
+    return BenchResult(name, time.time() - t0, n_ticks, derived,
+                       health=plan_health())
 
 
 def gpt2(n: int = 1) -> list[workload.CommProfile]:

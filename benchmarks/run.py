@@ -26,11 +26,13 @@ from benchmarks import (
     partial_compat,
     speedup_vs_jobs,
     stragglers,
+    timeline,
 )
 
 
 def main() -> None:
     suites = [
+        ("fig5_timeline", timeline.run),
         ("fig7_9_convergence", convergence.run),
         ("fig10_speedup_vs_jobs", speedup_vs_jobs.run),
         ("fig11_table2_diversity", diversity.run),
@@ -46,8 +48,10 @@ def main() -> None:
     for name, fn in suites:
         r = common.timed(name, fn)
         # merge as each suite finishes: a crash in a later suite must not
-        # discard the hours the earlier ones already spent
-        common.merge_results({name: r.derived})
+        # discard the hours the earlier ones already spent; _health records
+        # the suite's fusion/cache counters (kernel fallbacks, cache hits,
+        # compile groups) so the perf trajectory tracks them per run
+        common.merge_results({name: {**r.derived, "_health": r.health}})
         done += 1
         print(r.csv_line(), flush=True)
     print(f"# merged {done} suites into {common.RESULTS_PATH}")

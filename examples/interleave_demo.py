@@ -1,5 +1,8 @@
-"""Visualize MLTCP's convergence: per-job link utilization as ASCII art
-(the paper's Figure 7a), before and after enabling MLTCP.
+"""Visualize MLTCP's convergence from real probe data: per-job comm
+phases, per-flow cwnd and the interleave detector's overlap signal as
+ASCII timelines (the paper's Figures 5 / 7a), before and after enabling
+MLTCP — captured by the on-device probe subsystem (`netsim.telemetry`)
+instead of the chunk-averaged trace channels.
 
     PYTHONPATH=src python examples/interleave_demo.py
 """
@@ -7,10 +10,18 @@ import sys
 
 sys.path.insert(0, "src")
 
+import numpy as np  # noqa: E402
+
 from repro import netsim, workload  # noqa: E402
 from repro.core import Algo, CCParams, MLTCPConfig, Variant  # noqa: E402
 
 DT = 2e-5
+SIM_TIME = 3.0
+
+# arm the Fig. 5 probes + both detectors; ~600 samples across the run
+SPEC = netsim.TelemetrySpec(
+    probes=("flow_cwnd", "job_incomm", "interleave_overlap"),
+    stride=int(round(SIM_TIME / DT)) // 600)
 
 
 def build(pt):
@@ -22,32 +33,63 @@ def build(pt):
                                     tick_dt=DT, rtt=100e-6),
                         slope=1.75, intercept=0.25)
     return netsim.SimConfig(topo=topo, jobs=jobs, protocol=proto,
-                            sim_time=3.0, dt=DT, seed=1, n_chunks=600)
+                            sim_time=SIM_TIME, dt=DT, seed=1)
 
 
-def ascii_trace(res, title, tail=120):
-    tput = res.trace_jobtput[-tail:] / 6.25e9
-    print(f"\n{title}  (each column = one trace chunk; rows = jobs)")
-    for j in range(tput.shape[1]):
-        line = "".join(" .:-=+*#%@"[min(int(u * 9.99), 9)] for u in tput[:, j])
-        print(f"  job{j} |{line}|")
+def _cols(series: np.ndarray, width: int = 120) -> np.ndarray:
+    """Average a [S, ...] probe series down to `width` display columns."""
+    s = series.shape[0] // width * width
+    return series[:s].reshape(width, -1, *series.shape[1:]).mean(axis=1)
+
+
+def shade(u: float) -> str:
+    return " .:-=+*#%@"[min(int(u * 9.99), 9)]
+
+
+def comm_phases(res, title, width=120):
+    ic = _cols(res.telemetry.series["job_incomm"], width)
+    print(f"\n{title}  (comm-phase probe; each column ~"
+          f"{SIM_TIME / width * 1e3:.0f} ms)")
+    for j in range(ic.shape[1]):
+        print(f"  job{j} |{''.join(shade(u) for u in ic[:, j])}|")
+    ov = _cols(res.telemetry.series["interleave_overlap"], width)
+    print(f"  ovlp |{''.join(shade(u) for u in ov)}|")
+
+
+def cwnd_timeline(res, title, width=120):
+    cw = _cols(res.telemetry.series["flow_cwnd"], width)
+    cw = cw / max(cw.max(), 1e-9)
+    print(f"\n{title}  (per-flow cwnd probe, normalized)")
+    for n in range(cw.shape[1]):
+        print(f"  flow{n}|{''.join(shade(u) for u in cw[:, n])}|")
 
 
 def main():
     # one declarative plan: the scheme axis is static (the traced program
-    # differs), so run_plan compiles two programs and labels both results
+    # differs), so run_plan compiles two programs and labels both results;
+    # telemetry= arms the probe subsystem on every point
     plan = netsim.Plan(name="interleave-demo",
                        axes=(netsim.Axis("scheme", ("default", "mltcp")),),
                        build=build)
-    result = netsim.run_plan(plan)
+    result = netsim.run_plan(plan, telemetry=SPEC)
     (base,), (ml,) = (result.select(scheme="default"),
                       result.select(scheme="mltcp"))
-    ascii_trace(base, "default Reno — comm phases collide")
-    ascii_trace(ml, "MLTCP-Reno — comm phases interleave")
-    print(f"\ninterleave score: {netsim.mean_pairwise_interleave(base):.2f} "
-          f"-> {netsim.mean_pairwise_interleave(ml):.2f} (0 = interleaved)")
+    comm_phases(base, "default Reno — comm phases collide")
+    comm_phases(ml, "MLTCP-Reno — comm phases interleave")
+    cwnd_timeline(ml, "MLTCP-Reno")
+
+    tti_it = netsim.convergence_iteration(ml)
+    print(f"\ntime-to-interleave: MLTCP converges after "
+          f"{netsim.time_to_interleave(ml) * 1e3:.0f} ms "
+          f"({tti_it:.0f} training iterations); "
+          f"default Reno: {'never' if not base.telemetry.converged else 'yes'}")
+    print(f"interleave stability (tail): "
+          f"{base.telemetry.interleave_stability:.2f} -> "
+          f"{ml.telemetry.interleave_stability:.2f} (1 = stays interleaved)")
     print(f"avg iteration: {base.avg_iter(0) * 1e3:.1f} ms -> "
-          f"{ml.avg_iter(0) * 1e3:.1f} ms")
+          f"{ml.avg_iter(0) * 1e3:.1f} ms; streaming p99 sketch: "
+          f"{netsim.iter_time_quantile(base, 0.99) * 1e3:.1f} ms -> "
+          f"{netsim.iter_time_quantile(ml, 0.99) * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -40,7 +40,7 @@ Array = jnp.ndarray
 __all__ = [
     "Algo", "Variant", "CCParams", "FlowCCState", "Feedback",
     "MLTCPConfig", "MLTCPState", "DynamicParams", "init_state", "cc_tick",
-    "init_flow_state", "send_rate",
+    "f_values", "init_flow_state", "send_rate",
 ]
 
 
@@ -131,6 +131,33 @@ def _favoritism_score(cfg: MLTCPConfig, det: iteration.IterDetectState,
     return favoritism_mod.get_policy(cfg.favoritism)(obs)
 
 
+def f_values(cfg: MLTCPConfig, det: iteration.IterDetectState,
+             fb: Feedback, comm_elapsed: Optional[Array],
+             est_finish: Optional[Array], dyn: DynamicParams,
+             static_factors: Optional[Array] = None) -> Array:
+    """Per-flow aggressiveness factors F for the current detection state.
+
+    The factor stage of `cc_tick`, exposed on its own so observers (the
+    netsim telemetry ``job_f`` probe) can recompute F from a post-update
+    state without re-running the congestion-control update.
+    """
+    if cfg.cc.variant == int(Variant.OFF):
+        adaptive = jnp.ones_like(det.bytes_ratio)
+    else:
+        score = _favoritism_score(cfg, det, fb, comm_elapsed, est_finish)
+        fn = aggressiveness.make_fn(cfg.f_spec, dyn.slope, dyn.intercept)
+        adaptive = fn(score)
+    if static_factors is not None:
+        # Static [67]: a non-negative factor replaces F for that flow; a
+        # negative entry is the "adaptive" sentinel — that flow keeps the
+        # computed F.  The sentinel lets Static and adaptive plan points
+        # share one traced program (the factors are operand values), and
+        # the select is exact: all-non-negative factors reproduce the pure
+        # Static baseline bit-for-bit, all-negative the adaptive one.
+        return jnp.where(static_factors >= 0.0, static_factors, adaptive)
+    return adaptive
+
+
 def cc_tick(cfg: MLTCPConfig,
             state: MLTCPState,
             fb: Feedback,
@@ -174,22 +201,8 @@ def cc_tick(cfg: MLTCPConfig,
                                         fb.now, job_bytes_sent=job_bytes)
 
     # --- favoritism score -> F values (or Static constants) ---
-    if cfg.cc.variant == int(Variant.OFF):
-        adaptive = jnp.ones_like(det.bytes_ratio)
-    else:
-        score = _favoritism_score(cfg, det, fb, comm_elapsed, est_finish)
-        fn = aggressiveness.make_fn(cfg.f_spec, dyn.slope, dyn.intercept)
-        adaptive = fn(score)
-    if static_factors is not None:
-        # Static [67]: a non-negative factor replaces F for that flow; a
-        # negative entry is the "adaptive" sentinel — that flow keeps the
-        # computed F.  The sentinel lets Static and adaptive plan points
-        # share one traced program (the factors are operand values), and
-        # the select is exact: all-non-negative factors reproduce the pure
-        # Static baseline bit-for-bit, all-negative the adaptive one.
-        f_vals = jnp.where(static_factors >= 0.0, static_factors, adaptive)
-    else:
-        f_vals = adaptive
+    f_vals = f_values(cfg, det, fb, comm_elapsed, est_finish, dyn,
+                      static_factors=static_factors)
 
     f_wi, f_md = reno.split_f(cfg.cc, f_vals)
 

@@ -60,6 +60,18 @@ FALLBACK_COUNT = 0
 _FALLBACK_WARNED: set = set()
 
 
+def reset_fallback_warnings() -> None:
+    """Re-arm the once-per-reason fallback warning.
+
+    The guard is process-global, which is right within one plan (a K-point
+    sweep traces the same reason once) but wrong across plans: a later
+    `run_plan` that newly falls back would bump FALLBACK_COUNT without the
+    named-reason warning.  `run_plan` calls this at entry so each plan
+    warns at most once per reason.
+    """
+    _FALLBACK_WARNED.clear()
+
+
 def _resolve_interpret(override: Optional[bool]) -> bool:
     return INTERPRET if override is None else override
 

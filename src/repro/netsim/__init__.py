@@ -31,20 +31,32 @@ from repro.netsim.engine import (
 )
 from repro.netsim.experiment import (
     Axis,
+    GroupProfile,
     Plan,
+    PlanProfile,
     PlanResult,
+    prune_cache,
     restrict_workload,
     run_plan,
 )
 from repro.netsim.metrics import (
     SimResult,
+    convergence_iteration,
     interleave_score,
+    iter_time_quantile,
     iteration_times,
     mean_pairwise_interleave,
     postprocess,
     postprocess_sweep,
+    probe_timeline,
     speedup_stats,
     sweep_speedup_stats,
+    time_to_interleave,
+)
+from repro.netsim.telemetry import (
+    TelemetryResult,
+    TelemetrySpec,
+    register_probe,
 )
 
 __all__ = [
@@ -52,8 +64,12 @@ __all__ = [
     "CassiniSchedule", "SimConfig", "JobSpec", "simulate",
     "SweepParams", "SweepPoint", "simulate_sweep", "make_sweep",
     "grid_sweep", "sweep_len", "sweep_of", "sweep_slice",
-    "Axis", "Plan", "PlanResult", "restrict_workload", "run_plan",
+    "Axis", "Plan", "PlanResult", "GroupProfile", "PlanProfile",
+    "prune_cache", "restrict_workload", "run_plan",
     "SimResult", "interleave_score", "iteration_times",
     "mean_pairwise_interleave", "postprocess", "postprocess_sweep",
     "speedup_stats", "sweep_speedup_stats",
+    "TelemetrySpec", "TelemetryResult", "register_probe",
+    "probe_timeline", "time_to_interleave", "convergence_iteration",
+    "iter_time_quantile",
 ]

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mltcp as core
+from repro.netsim import telemetry as telem
 from repro.netsim.topology import HashableConfig, Topology
 
 Array = jnp.ndarray
@@ -127,6 +128,12 @@ class SimConfig(HashableConfig):
     n_chunks: int = 400               # trace resolution
     seed: int = 0
     use_pallas_kernel: bool = False   # route CC tick through kernels/ops.py
+    # On-device probe subsystem (netsim.telemetry, DESIGN.md §6).  None is
+    # the zero-cost default: every telemetry hook is gated on a python-level
+    # `cfg.telemetry is not None`, so an unarmed config traces the exact
+    # program this engine emitted before probes existed (bit-identical
+    # RawSimOutput, no extra traces — pinned by tests/test_telemetry.py).
+    telemetry: Optional[telem.TelemetrySpec] = None
 
     @property
     def n_ticks(self) -> int:
@@ -433,6 +440,9 @@ class EngineState(NamedTuple):
     acc_drops: Array      # scalar (packets)
     acc_marks: Array      # scalar (packets)
     acc_jobbytes: Array   # [J] delivered bytes per job
+    # armed-probe ring buffers + detector state; None (zero pytree leaves)
+    # unless cfg.telemetry arms the subsystem
+    telemetry: Optional[telem.TelemetryState] = None
 
 
 class TickStatics(NamedTuple):
@@ -526,6 +536,8 @@ def _init_state(cfg: SimConfig, statics: TickStatics,
         acc_drops=jnp.asarray(0.0, jnp.float32),
         acc_marks=jnp.asarray(0.0, jnp.float32),
         acc_jobbytes=z((J,), jnp.float32),
+        telemetry=(telem.init_state(cfg, cfg.telemetry)
+                   if cfg.telemetry is not None else None),
     )
 
 
@@ -779,6 +791,32 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     acc_marks = st.acc_marks + marked_f.sum() / mss
     acc_jobbytes = st.acc_jobbytes.at[statics.f2j].add(delivered)
 
+    # ------------------------------------------------------------------
+    # 8. Telemetry probes + streaming detectors (off = this block vanishes)
+    # ------------------------------------------------------------------
+    tstate = st.telemetry
+    if cfg.telemetry is not None:
+        spec = cfg.telemetry
+        f_job = None
+        if spec.wants("job_f"):
+            # recompute the factor stage from the post-update detection
+            # state (the kernel path doesn't return per-flow F), then
+            # average socket factors per job
+            f_flow = core.f_values(cfg.protocol, proto.det, fb,
+                                   comm_elapsed, est_finish, dyn,
+                                   static_factors=static_factors)
+            f_job = (jnp.zeros((J,), jnp.float32).at[statics.f2j]
+                     .add(f_flow * statics.spj_inv))
+        sig = telem.TickSignals(
+            tick=st.tick, t=t,
+            cwnd=proto.cc.cwnd, rate=rate,
+            bytes_ratio=proto.det.bytes_ratio,
+            q_len=q_len, red_prob=p_red,
+            in_comm=in_comm, phase_idx=phase_idx, iter_idx=iter_idx,
+            iter_done=iter_done, iter_time=iter_time,
+            f_job=f_job, job_active=sweep.job_active)
+        tstate = telem.tick_update(cfg, spec, st.telemetry, sig)
+
     return EngineState(
         proto=proto, backlog=backlog, transit=transit,
         ring_del=ring_del, ring_loss=ring_loss, ring_cnp=ring_cnp,
@@ -789,7 +827,7 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
         iter_times=iter_times, straggle_extra=straggle_extra,
         key=key, tick=st.tick + 1,
         acc_util=acc_util, acc_drops=acc_drops, acc_marks=acc_marks,
-        acc_jobbytes=acc_jobbytes,
+        acc_jobbytes=acc_jobbytes, telemetry=tstate,
     ), None
 
 
@@ -808,6 +846,9 @@ class RawSimOutput(NamedTuple):
     trace_jobtput: Array  # [n_chunks, J] delivered bytes/s per job
     trace_ratio: Array    # [n_chunks, J] mean bytes_ratio snapshot per job
     final_state: EngineState
+    # final TelemetryState (ring buffers + detector scalars) when
+    # cfg.telemetry is armed; None (zero extra leaves) otherwise
+    telemetry: Optional[telem.TelemetryState] = None
 
 
 def _run_single(cfg: SimConfig, statics: TickStatics,
@@ -824,21 +865,17 @@ def _run_single(cfg: SimConfig, statics: TickStatics,
                          acc_marks=jnp.asarray(0.0, jnp.float32),
                          acc_jobbytes=jnp.zeros_like(st.acc_jobbytes))
         st, _ = jax.lax.scan(tick, st, None, length=ticks_per_chunk)
-        n_jobs = st.acc_jobbytes.shape[0]
-        flows_per_job = jnp.zeros((n_jobs,)).at[statics.f2j].add(1.0)
-        ratio_job = (jnp.zeros((n_jobs,)).at[statics.f2j]
-                     .add(st.proto.det.bytes_ratio) / flows_per_job)
-        out = (st.acc_util / ticks_per_chunk, st.acc_drops, st.acc_marks,
-               st.in_comm, st.tick.astype(jnp.float32) * cfg.dt,
-               st.acc_jobbytes / (ticks_per_chunk * cfg.dt), ratio_job)
-        return st, out
+        # the legacy chunk-averaged channels, via the built-in chunk-probe
+        # registry (telemetry.CHUNK_PROBES — same expressions, same order)
+        return st, telem.chunk_capture(cfg, statics, st, ticks_per_chunk)
 
     st, (u, d, m, ic, tt, jt, rj) = jax.lax.scan(chunk, st, None,
                                                  length=n_chunks)
     return RawSimOutput(iter_times=st.iter_times, iter_counts=st.iter_idx,
                         trace_util=u, trace_drops=d, trace_marks=m,
                         trace_incomm=ic, trace_t=tt, trace_jobtput=jt,
-                        trace_ratio=rj, final_state=st)
+                        trace_ratio=rj, final_state=st,
+                        telemetry=st.telemetry)
 
 
 # Incremented once per (re)trace of the sweep program; tests pin "a K-point
@@ -861,16 +898,7 @@ def _check_cfg(cfg: SimConfig) -> None:
             f"simulator dt ({cfg.dt}); build CCParams with tick_dt=dt")
 
 
-def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
-    """Run K simulations batched over the sweep axis — one trace, one compile.
-
-    ``sweep`` is a batched SweepParams (see `make_sweep` / `grid_sweep`):
-    every non-None leaf carries a leading [K] axis.  The whole chunked
-    `lax.scan` is vmapped over that axis, so the returned RawSimOutput's
-    leaves all gain a leading [K] dimension (postprocess with
-    `metrics.postprocess_sweep`).  Retraces only when the *static* config
-    (topology, jobs, algorithm, K) changes — never per grid point.
-    """
+def _validate_sweep(cfg: SimConfig, sweep: SweepParams) -> None:
     _check_cfg(cfg)
     if sweep.slope.ndim < 1:
         raise ValueError("sweep is unbatched; every field needs a leading "
@@ -886,7 +914,35 @@ def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
     if any(c is not None for c in cas) and any(c is None for c in cas):
         raise ValueError("cassini_offset / cassini_period / cassini_eps "
                          "must be set together (or all None)")
+
+
+def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:
+    """Run K simulations batched over the sweep axis — one trace, one compile.
+
+    ``sweep`` is a batched SweepParams (see `make_sweep` / `grid_sweep`):
+    every non-None leaf carries a leading [K] axis.  The whole chunked
+    `lax.scan` is vmapped over that axis, so the returned RawSimOutput's
+    leaves all gain a leading [K] dimension (postprocess with
+    `metrics.postprocess_sweep`).  Retraces only when the *static* config
+    (topology, jobs, algorithm, K) changes — never per grid point.
+    """
+    _validate_sweep(cfg, sweep)
     return _run_sweep(cfg, sweep)
+
+
+def lower_sweep(cfg: SimConfig, sweep: SweepParams):
+    """AOT-lower the sweep program (`jax.stages.Lowered`) without running it.
+
+    The profiling hook behind `run_plan(..., profile=True)`: callers split
+    wall time into trace (`lower_sweep`), compile (`.compile()`) and execute
+    (calling the compiled object), and read `.memory_analysis()` for the
+    device footprint.  Shares `_run_sweep`'s jit/lowering cache (pin with
+    `TRACE_COUNT` if retrace behavior matters), but `.compile()` on the
+    returned object re-runs XLA, so the compile_s split is only meaningful
+    for cold groups.
+    """
+    _validate_sweep(cfg, sweep)
+    return _run_sweep.lower(cfg, sweep)
 
 
 def simulate(cfg: SimConfig) -> RawSimOutput:

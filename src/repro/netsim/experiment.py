@@ -55,12 +55,14 @@ import dataclasses
 import hashlib
 import os
 import pickle
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.netsim import engine as engine_mod
 from repro.netsim import metrics
 from repro.netsim.engine import (
     SimConfig,
@@ -70,9 +72,11 @@ from repro.netsim.engine import (
     simulate_sweep,
     sweep_of,
 )
+from repro.netsim.telemetry import TelemetrySpec
 from repro.netsim.topology import Topology
 
-__all__ = ["Axis", "Plan", "PlanResult", "run_plan", "restrict_workload"]
+__all__ = ["Axis", "Plan", "PlanResult", "GroupProfile", "PlanProfile",
+           "run_plan", "prune_cache", "restrict_workload"]
 
 _DYNAMIC_FIELDS = frozenset(SweepParams._fields)
 
@@ -491,6 +495,68 @@ def _shard_sweep(sweep: SweepParams, k: int,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class GroupProfile:
+    """Runtime profile of one compile group's sweep execution.
+
+    Always records the end-to-end wall time and whether the call traced a
+    new program (``traced``; False = served from the jit cache).  The
+    trace/compile/execute split and the device-memory footprint are only
+    available under ``run_plan(..., profile=True)``, which AOT-lowers the
+    group (`engine.lower_sweep`) and pays a fresh XLA compile per call, so
+    it is opt-in and the split fields are None otherwise.
+    """
+
+    n_points: int                     # K lowered onto the sweep axis
+    n_jobs: int                       # group fabric size (padded)
+    n_flows: int
+    n_ticks: int                      # per simulation
+    wall_s: float                     # end-to-end (trace+compile+execute)
+    traced: bool
+    trace_s: Optional[float] = None
+    compile_s: Optional[float] = None
+    execute_s: Optional[float] = None
+    device_bytes: Optional[int] = None  # temp+output footprint, if exposed
+
+
+@dataclasses.dataclass
+class PlanProfile:
+    """Per-group runtime profiles of one `run_plan` call.
+
+    The costing input for scheduling follow-ons (ROADMAP: sharding *across*
+    compile groups needs per-group cost estimates — this is where they come
+    from).
+    """
+
+    groups: list[GroupProfile] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_wall_s(self) -> float:
+        return sum(g.wall_s for g in self.groups)
+
+    @property
+    def total_ticks(self) -> int:
+        """Simulator ticks across every group (K * n_ticks summed)."""
+        return sum(g.n_points * g.n_ticks for g in self.groups)
+
+    def summary(self) -> dict:
+        out = {"n_groups": len(self.groups),
+               "wall_s": round(self.total_wall_s, 3),
+               "n_traced": sum(g.traced for g in self.groups)}
+        if any(g.compile_s is not None for g in self.groups):
+            out["trace_s"] = round(sum(g.trace_s or 0.0
+                                       for g in self.groups), 3)
+            out["compile_s"] = round(sum(g.compile_s or 0.0
+                                         for g in self.groups), 3)
+            out["execute_s"] = round(sum(g.execute_s or 0.0
+                                         for g in self.groups), 3)
+        mem = [g.device_bytes for g in self.groups
+               if g.device_bytes is not None]
+        if mem:
+            out["peak_group_device_bytes"] = max(mem)
+        return out
+
+
+@dataclasses.dataclass
 class PlanResult:
     """All of a plan's results, each self-describing via its `SweepPoint`.
 
@@ -513,6 +579,9 @@ class PlanResult:
     # points served from run_plan's cache_dir (0 without a cache);
     # n_compile_groups counts only the groups actually simulated.
     n_cache_hits: int = 0
+    # per-group runtime profile (wall times always; the trace/compile/
+    # execute split and device footprint under run_plan(..., profile=True))
+    profile: PlanProfile = dataclasses.field(default_factory=PlanProfile)
 
     def __len__(self) -> int:
         return len(self.results)
@@ -577,21 +646,55 @@ def _stable_bytes(obj, out: list) -> None:
         _stable_bytes(np.asarray(obj), out)
 
 
+# Result-schema version: bump whenever the pickled `SimResult` payload
+# changes shape (new fields, changed semantics).  It salts the content hash
+# AND prefixes the filename, so entries written under another schema are
+# never deserialized — they simply miss — and `prune_cache` can evict them
+# by name without unpickling anything.
+_SCHEMA_VERSION = 2
+
+
 def _point_cache_key(cfg: SimConfig, overrides: dict) -> str:
     """Content hash of everything that determines one point's result: the
-    point's full (uncanonicalized) config plus its resolved dynamic
-    overrides.  Deliberately *not* a function of the group the point lands
-    in — padded lowering is value-identical to unpadded (DESIGN.md §5), so
-    cached results survive regrouping (new axis values, pad_jobs toggles).
+    result-schema version, the point's full (uncanonicalized) config and
+    its resolved dynamic overrides.  Deliberately *not* a function of the
+    group the point lands in — padded lowering is value-identical to
+    unpadded (DESIGN.md §5), so cached results survive regrouping (new
+    axis values, pad_jobs toggles).
     """
-    out: list = [b"repro-plan-cache-v1"]
+    out: list = [f"repro-plan-cache-v{_SCHEMA_VERSION}".encode()]
     _stable_bytes(cfg, out)
     _stable_bytes({k: np.asarray(v) for k, v in overrides.items()}, out)
     return hashlib.sha256(b"".join(out)).hexdigest()[:32]
 
 
 def _cache_path(cache_dir: str, key: str) -> str:
-    return os.path.join(cache_dir, f"{key}.pkl")
+    return os.path.join(cache_dir, f"v{_SCHEMA_VERSION}-{key}.pkl")
+
+
+def prune_cache(cache_dir: str) -> int:
+    """Evict cache entries written under a different result-schema version.
+
+    Stale-version entries are already unreachable (the version salts the
+    key and prefixes the filename), so this only reclaims disk; returns the
+    number of files removed.  Unversioned `.pkl` files (the v1 layout) and
+    torn `.tmp` leftovers are pruned too; current-version entries are kept.
+    """
+    prefix = f"v{_SCHEMA_VERSION}-"
+    removed = 0
+    try:
+        names = os.listdir(cache_dir)
+    except OSError:
+        return 0
+    for name in names:
+        stale_pkl = name.endswith(".pkl") and not name.startswith(prefix)
+        if stale_pkl or name.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(cache_dir, name))
+                removed += 1
+            except OSError:
+                pass
+    return removed
 
 
 def _cache_load(cache_dir: str, key: str) -> Optional[metrics.SimResult]:
@@ -631,8 +734,49 @@ def _kernel_fallback_count() -> int:
     return getattr(mod, "FALLBACK_COUNT", 0) if mod is not None else 0
 
 
+def _reset_fallback_warnings() -> None:
+    """Re-arm ops.py's once-per-reason fallback warning for this plan (the
+    guard is process-global, so without this a plan that newly falls back
+    after an earlier one would bump FALLBACK_COUNT silently)."""
+    import sys
+
+    mod = sys.modules.get("repro.kernels.ops")
+    if mod is not None:
+        mod.reset_fallback_warnings()
+
+
+def _run_group_profiled(cfg: SimConfig, sweep: SweepParams,
+                        prof: GroupProfile):
+    """AOT-lowered group execution with a trace/compile/execute wall-time
+    split and the compiled program's device-memory footprint."""
+    traces_before = engine_mod.TRACE_COUNT
+    t0 = time.perf_counter()
+    lowered = engine_mod.lower_sweep(cfg, sweep)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    raw = compiled(sweep)
+    jax.block_until_ready(raw)
+    t3 = time.perf_counter()
+    prof.trace_s = t1 - t0
+    prof.compile_s = t2 - t1
+    prof.execute_s = t3 - t2
+    prof.wall_s = t3 - t0
+    prof.traced = engine_mod.TRACE_COUNT > traces_before
+    try:
+        mem = compiled.memory_analysis()
+        prof.device_bytes = int(mem.temp_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.argument_size_in_bytes)
+    except Exception:               # backend doesn't expose the analysis
+        prof.device_bytes = None
+    return raw
+
+
 def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
-             cache_dir: Optional[str] = None) -> PlanResult:
+             cache_dir: Optional[str] = None,
+             telemetry: Optional[TelemetrySpec] = None,
+             profile: bool = False) -> PlanResult:
     """Execute a plan: one `simulate_sweep` per compile group.
 
     shard:     "auto" | True | False — lay each group's K axis across local
@@ -640,14 +784,29 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
     pad_jobs:  merge workload-size variants into one padded + masked compile
                group where possible (disable to force exact grouping).
     cache_dir: if given, a directory of per-point result pickles keyed by a
-               content hash of (point config, resolved overrides).  Points
-               already present are served from disk and *excluded* from
-               compile-group formation; fresh points are written back after
-               postprocessing.  Interrupted plans resume where they stopped,
-               and grown plans only simulate the new cells.
+               content hash of (schema version, point config, resolved
+               overrides).  Points already present are served from disk and
+               *excluded* from compile-group formation; fresh points are
+               written back after postprocessing.  Interrupted plans resume
+               where they stopped, and grown plans only simulate the new
+               cells; `prune_cache` evicts entries from older schemas.
+    telemetry: arm the probe subsystem (netsim.telemetry) on every point:
+               the spec is stamped onto each built config (joining its
+               static signature and cache key), and each `SimResult` gains
+               a `.telemetry` with the probe series and detector outputs.
+               None leaves the built configs untouched — a build function
+               may still arm points itself.
+    profile:   record a trace/compile/execute wall-time split and device
+               footprint per compile group into `PlanResult.profile` via
+               AOT lowering.  The AOT `.compile()` re-runs XLA on every
+               call, so it is opt-in; the default path still profiles
+               end-to-end wall time and whether each group (re)traced.
     """
     points = plan.points()
     cfgs = [plan.build(dict(pt)) for pt in points]
+    if telemetry is not None:
+        cfgs = [dataclasses.replace(c, telemetry=telemetry) for c in cfgs]
+    _reset_fallback_warnings()
     dyn_axes = [ax for ax in plan.axes if ax.is_dynamic()]
     for ax in dyn_axes:
         if ax.target not in _DYNAMIC_FIELDS:
@@ -673,6 +832,7 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
 
     groups = _compile_groups([cfgs[i] for i in todo], pad_jobs)
     fallbacks_before = _kernel_fallback_count()
+    plan_profile = PlanProfile()
     for group in groups:
         idxs = [todo[j] for j in group.idxs]   # group indexes the todo subset
         per_point = [_point_params(cfgs[i], overrides[i], group)
@@ -680,7 +840,20 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
         sweep = _stack_params(per_point)
         k = len(idxs)
         sweep, _ = _shard_sweep(sweep, k, shard)
-        raw = simulate_sweep(group.cfg, sweep)
+        prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
+                            n_flows=group.cfg.topo.n_flows,
+                            n_ticks=group.cfg.n_ticks,
+                            wall_s=0.0, traced=False)
+        if profile:
+            raw = _run_group_profiled(group.cfg, sweep, prof)
+        else:
+            traces_before = engine_mod.TRACE_COUNT
+            t0 = time.perf_counter()
+            raw = simulate_sweep(group.cfg, sweep)
+            jax.block_until_ready(raw)
+            prof.wall_s = time.perf_counter() - t0
+            prof.traced = engine_mod.TRACE_COUNT > traces_before
+        plan_profile.groups.append(prof)
         for slot, i in enumerate(idxs):
             point = SweepPoint(axes=dict(points[i]), params=per_point[slot],
                                n_jobs=cfgs[i].jobs.n_jobs)
@@ -693,4 +866,5 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
                       n_compile_groups=len(groups),
                       n_kernel_fallbacks=(_kernel_fallback_count()
                                           - fallbacks_before),
-                      n_cache_hits=n_cache_hits)
+                      n_cache_hits=n_cache_hits,
+                      profile=plan_profile)

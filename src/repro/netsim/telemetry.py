@@ -1,0 +1,491 @@
+"""On-device probe subsystem — declarative time-series capture inside the scan.
+
+The engine's hard-wired ``trace_*`` channels average over chunks, which is
+the wrong resolution for the paper's *dynamic* claims: Fig. 5/7a plot
+per-flow cwnd and throughput timelines at sub-iteration resolution, and the
+headline "flows stabilize into an interleaved state within a few training
+iterations" needs a *time-to-interleave* measurement, not a tail average.
+
+This module makes capture declarative and extensible (DESIGN.md §6):
+
+* A static `TelemetrySpec` (hashable; part of `SimConfig`, hence of the
+  compile-group key) names which **probes** are armed and their decimation
+  ``stride``.  Armed probes sample per-tick signals — per-flow cwnd/rate,
+  per-link queue depth and RED mark rate, per-job phase state and F factor
+  — into preallocated ring buffers carried through the `lax.scan` state.
+* **In-scan streaming detectors** reduce the run without materializing
+  dense traces: the interleave detector tracks the EWMA pairwise
+  comm-overlap and records the last tick it exceeded a threshold
+  (time-to-interleave = the first tick after which overlap *stays* below),
+  plus a tail-stability fraction; the iteration-time sketch bins completed
+  iteration times into a per-job log histogram for streaming p50/p99.
+* The existing chunk-averaged ``trace_*`` channels are expressed through
+  the same registry as **built-in chunk probes** (`CHUNK_PROBES`), always
+  on for compatibility — `chunk_capture` emits exactly the expressions the
+  engine emitted before, so telemetry-off programs are bit-identical.
+
+**Off is free**: every hook in the engine is gated on a *python-level*
+``cfg.telemetry is not None``, so an unarmed config traces the exact same
+program as before this subsystem existed (pinned by tests/test_telemetry.py
+and the CI telemetry gate on `engine.TRACE_COUNT`).
+
+Custom probes register with `register_probe(name, kind, capture)`; capture
+functions read a `TickSignals` view of the tick's intermediates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Tick signals — the read-only view probes capture from
+# ---------------------------------------------------------------------------
+
+class TickSignals(NamedTuple):
+    """Per-tick intermediates the engine exposes to armed probes.
+
+    All values are *post-update* for this tick except ``rate``, which is the
+    send rate the tick actually injected at (the pre-update CC rate — the
+    quantity Fig. 5 plots).  ``f_job`` is only computed when the ``job_f``
+    probe is armed; ``overlap`` is the interleave detector's current EWMA
+    pairwise comm-overlap (None when the detector is unarmed).
+    """
+
+    tick: Array               # int32 scalar
+    t: Array                  # float32 scalar, seconds
+    cwnd: Array               # [N] packets
+    rate: Array               # [N] bytes/s (injection rate this tick)
+    bytes_ratio: Array        # [N] Algorithm 1 progress ratio
+    q_len: Array              # [M] queued bytes per link
+    red_prob: Array           # [M] RED mark/drop probability per link
+    in_comm: Array            # [J] bool
+    phase_idx: Array          # [J] int32
+    iter_idx: Array           # [J] int32
+    iter_done: Array          # [J] bool (an iteration completed this tick)
+    iter_time: Array          # [J] seconds (valid where iter_done)
+    f_job: Optional[Array] = None   # [J] mean aggressiveness factor
+    job_active: Optional[Array] = None  # [J] bool padded-jobs mask
+    overlap: Optional[Array] = None     # scalar EWMA pairwise overlap
+
+
+# ---------------------------------------------------------------------------
+# Probe registry
+# ---------------------------------------------------------------------------
+
+class Probe(NamedTuple):
+    """One registered probe: a capture function plus its shape ``kind``.
+
+    kind decides the per-sample shape and how `collect` trims padded
+    fabrics: "flow" -> [N] (trimmed to the point's own flows), "link" ->
+    [M], "job" -> [J] (trimmed to active jobs), "scalar" -> [].
+    """
+
+    kind: str
+    capture: Callable[[TickSignals], Array]
+    doc: str = ""
+
+
+_KINDS = ("flow", "link", "job", "scalar")
+
+PROBES: dict[str, Probe] = {}
+
+
+def register_probe(name: str, kind: str,
+                   capture: Callable[[TickSignals], Array],
+                   doc: str = "", overwrite: bool = False) -> None:
+    """Add a probe to the registry so `TelemetrySpec(probes=(name, ...))`
+    can arm it.  ``capture`` maps a `TickSignals` to this tick's sample."""
+    if kind not in _KINDS:
+        raise ValueError(f"probe {name!r}: unknown kind {kind!r} "
+                         f"(expected one of {_KINDS})")
+    if name in PROBES and not overwrite:
+        raise ValueError(f"probe {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    PROBES[name] = Probe(kind=kind, capture=capture, doc=doc)
+
+
+register_probe("flow_cwnd", "flow", lambda s: s.cwnd,
+               "per-flow congestion window (packets)")
+register_probe("flow_rate", "flow", lambda s: s.rate,
+               "per-flow injection rate (bytes/s)")
+register_probe("flow_ratio", "flow", lambda s: s.bytes_ratio,
+               "per-flow Algorithm-1 bytes_ratio")
+register_probe("link_queue", "link", lambda s: s.q_len,
+               "per-link queued bytes")
+register_probe("link_mark_rate", "link", lambda s: s.red_prob,
+               "per-link RED mark/drop probability")
+register_probe("job_incomm", "job", lambda s: s.in_comm.astype(jnp.float32),
+               "per-job comm-phase indicator")
+register_probe("job_phase", "job", lambda s: s.phase_idx.astype(jnp.float32),
+               "per-job sub-phase index")
+register_probe("job_iter", "job", lambda s: s.iter_idx.astype(jnp.float32),
+               "per-job completed-iteration count")
+register_probe("job_f", "job", lambda s: s.f_job,
+               "per-job mean aggressiveness factor F")
+register_probe("interleave_overlap", "scalar", lambda s: s.overlap,
+               "EWMA pairwise comm-overlap (interleave detector signal)")
+
+
+def probe_shape(name: str, cfg) -> tuple[int, ...]:
+    kind = PROBES[name].kind
+    if kind == "flow":
+        return (cfg.topo.n_flows,)
+    if kind == "link":
+        return (cfg.topo.n_links,)
+    if kind == "job":
+        return (cfg.jobs.n_jobs,)
+    return ()
+
+
+# ---------------------------------------------------------------------------
+# The spec — static, hashable, part of the compile-group key
+# ---------------------------------------------------------------------------
+
+DETECTORS = ("interleave", "iter_sketch")
+
+DEFAULT_PROBES = ("flow_cwnd", "flow_rate", "link_queue", "link_mark_rate",
+                  "job_incomm", "job_iter")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static description of what a run captures (DESIGN.md §6).
+
+    Lives on `SimConfig.telemetry`, so arming/changing it retraces (one new
+    trace per compile group — pinned by tests) while leaving unarmed
+    configs' programs untouched.
+
+    probes:    registered probe names sampled every ``stride`` ticks into a
+               ring buffer of ``capacity`` slots (None: sized to hold every
+               sampled tick — no wrapping).
+    detectors: in-scan streaming reductions; "interleave" maintains the
+               EWMA pairwise comm-overlap (time constant ``overlap_tau``
+               seconds) and records time-to-interleave against
+               ``overlap_threshold`` (converged only if overlap stays below
+               it for the final ``hold_frac`` of the run), "iter_sketch"
+               bins completed iteration times into ``sketch_bins``
+               log-spaced bins on [sketch_lo, sketch_hi] seconds for
+               streaming p50/p99.
+    """
+
+    probes: tuple[str, ...] = DEFAULT_PROBES
+    stride: int = 50
+    capacity: Optional[int] = None
+    detectors: tuple[str, ...] = DETECTORS
+    # an EWMA Jaccard above 0.5 means comm phases are majority-overlapping;
+    # tau spans a fraction of an iteration so within-phase brush-ups don't
+    # reset the convergence clock (picked against dense post-hoc traces —
+    # tests/test_telemetry.py pins detector == NumPy replay)
+    overlap_threshold: float = 0.5
+    overlap_tau: float = 0.05
+    hold_frac: float = 0.1
+    sketch_bins: int = 64
+    sketch_lo: float = 1e-4
+    sketch_hi: float = 100.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "probes", tuple(self.probes))
+        object.__setattr__(self, "detectors", tuple(self.detectors))
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        for d in self.detectors:
+            if d not in DETECTORS:
+                raise ValueError(f"unknown detector {d!r} "
+                                 f"(valid: {', '.join(DETECTORS)})")
+
+    def wants(self, probe: str) -> bool:
+        return probe in self.probes
+
+    def needs_interleave(self) -> bool:
+        return "interleave" in self.detectors or self.wants("interleave_overlap")
+
+    def needs_sketch(self) -> bool:
+        return "iter_sketch" in self.detectors
+
+    def validate(self) -> None:
+        """Check every armed probe is registered (registry may grow after a
+        spec is built, so this runs at arm time, not construction)."""
+        for name in self.probes:
+            if name not in PROBES:
+                raise ValueError(
+                    f"unknown probe {name!r}; registered probes: "
+                    f"{', '.join(sorted(PROBES))} (register_probe adds more)")
+
+    def n_slots(self, n_ticks: int) -> int:
+        full = -(-n_ticks // self.stride)        # ceil: ticks 0, s, 2s, ...
+        return full if self.capacity is None else min(self.capacity, full)
+
+
+# ---------------------------------------------------------------------------
+# Scan-carried state
+# ---------------------------------------------------------------------------
+
+class TelemetryState(NamedTuple):
+    """Telemetry's slice of the engine's scan carry.
+
+    ``series`` maps armed probe name -> [cap, *shape] ring buffer;
+    ``sample_tick`` records which tick each slot holds (-1 = unset), so
+    `collect` can unwrap a wrapped ring chronologically.  Detector fields
+    are None when the detector is unarmed (absent pytree leaves — an
+    unarmed detector adds nothing to the carry).
+    """
+
+    series: dict[str, Array]
+    sample_tick: Array            # [cap] int32
+    n_samples: Array              # int32 total writes
+    # interleave detector
+    ewma_both: Optional[Array] = None      # [P2] per-pair EWMA of a&b
+    ewma_either: Optional[Array] = None    # [P2] per-pair EWMA of a|b
+    last_bad_tick: Optional[Array] = None  # int32 (-1: never above threshold)
+    iters_at_last_bad: Optional[Array] = None  # int32
+    tail_bad: Optional[Array] = None       # int32 bad ticks in tail window
+    tail_ticks: Optional[Array] = None     # int32 ticks in tail window
+    # iteration-time sketch
+    iter_hist: Optional[Array] = None      # [J, B] int32
+
+
+def init_state(cfg, spec: TelemetrySpec) -> TelemetryState:
+    """Preallocate ring buffers and detector state for one simulation."""
+    spec.validate()
+    cap = spec.n_slots(cfg.n_ticks)
+    series = {name: jnp.zeros((cap,) + probe_shape(name, cfg), jnp.float32)
+              for name in spec.probes}
+    j = cfg.jobs.n_jobs
+    kw: dict = {}
+    if spec.needs_interleave():
+        p2 = j * (j - 1) // 2
+        kw.update(ewma_both=jnp.zeros((p2,), jnp.float32),
+                  ewma_either=jnp.zeros((p2,), jnp.float32),
+                  last_bad_tick=jnp.asarray(-1, jnp.int32),
+                  iters_at_last_bad=jnp.asarray(0, jnp.int32),
+                  tail_bad=jnp.asarray(0, jnp.int32),
+                  tail_ticks=jnp.asarray(0, jnp.int32))
+    if spec.needs_sketch():
+        kw.update(iter_hist=jnp.zeros((j, spec.sketch_bins), jnp.int32))
+    return TelemetryState(series=series,
+                          sample_tick=jnp.full((cap,), -1, jnp.int32),
+                          n_samples=jnp.asarray(0, jnp.int32), **kw)
+
+
+def tick_update(cfg, spec: TelemetrySpec, st: TelemetryState,
+                sig: TickSignals) -> TelemetryState:
+    """One telemetry step: detectors first (so the ``interleave_overlap``
+    probe sees this tick's value), then decimated ring-buffer capture."""
+    kw: dict = {}
+    j = sig.in_comm.shape[0]
+
+    if spec.needs_interleave():
+        ia, ib = np.triu_indices(j, 1)          # static pair index arrays
+        a = sig.in_comm[ia]
+        b = sig.in_comm[ib]
+        if sig.job_active is not None:
+            w = (sig.job_active[ia] & sig.job_active[ib]).astype(jnp.float32)
+        else:
+            w = jnp.ones((len(ia),), jnp.float32)
+        both = w * (a & b).astype(jnp.float32)
+        either = w * (a | b).astype(jnp.float32)
+        alpha = jnp.float32(-math.expm1(-cfg.dt / spec.overlap_tau))
+        ewma_both = st.ewma_both + alpha * (both - st.ewma_both)
+        ewma_either = st.ewma_either + alpha * (either - st.ewma_either)
+        per_pair = ewma_both / jnp.maximum(ewma_either, 1e-6)
+        overlap = jnp.sum(per_pair * w) / jnp.maximum(jnp.sum(w), 1.0)
+        bad = overlap > spec.overlap_threshold
+        active_iters = sig.iter_idx
+        if sig.job_active is not None:
+            active_iters = jnp.where(sig.job_active, sig.iter_idx, 0)
+        cur_iters = (jnp.max(active_iters) if j
+                     else jnp.asarray(0, jnp.int32))
+        in_tail = sig.tick >= (cfg.n_ticks // 2)
+        kw.update(
+            ewma_both=ewma_both, ewma_either=ewma_either,
+            last_bad_tick=jnp.where(bad, sig.tick, st.last_bad_tick),
+            iters_at_last_bad=jnp.where(bad, cur_iters,
+                                        st.iters_at_last_bad),
+            tail_bad=st.tail_bad + (bad & in_tail).astype(jnp.int32),
+            tail_ticks=st.tail_ticks + in_tail.astype(jnp.int32))
+        sig = sig._replace(overlap=overlap)
+
+    if spec.needs_sketch():
+        log_lo = math.log(spec.sketch_lo)
+        inv_w = spec.sketch_bins / (math.log(spec.sketch_hi) - log_lo)
+        x = jnp.clip(sig.iter_time, spec.sketch_lo, spec.sketch_hi)
+        bins = jnp.clip((jnp.log(x) - jnp.float32(log_lo))
+                        * jnp.float32(inv_w), 0,
+                        spec.sketch_bins - 1).astype(jnp.int32)
+        kw["iter_hist"] = st.iter_hist.at[jnp.arange(j), bins].add(
+            sig.iter_done.astype(jnp.int32))
+
+    cap = st.sample_tick.shape[0]
+    take = (sig.tick % spec.stride) == 0
+    slot = (sig.tick // spec.stride) % cap
+    series = {}
+    for name in spec.probes:
+        val = jnp.asarray(PROBES[name].capture(sig), jnp.float32)
+        buf = st.series[name]
+        series[name] = buf.at[slot].set(jnp.where(take, val, buf[slot]))
+    return st._replace(
+        series=series,
+        sample_tick=st.sample_tick.at[slot].set(
+            jnp.where(take, sig.tick, st.sample_tick[slot])),
+        n_samples=st.n_samples + take.astype(jnp.int32),
+        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Built-in chunk probes — the legacy trace_* channels
+# ---------------------------------------------------------------------------
+
+def _trace_ratio(cfg, statics, st, ticks_per_chunk):
+    n_jobs = st.acc_jobbytes.shape[0]
+    flows_per_job = jnp.zeros((n_jobs,)).at[statics.f2j].add(1.0)
+    return (jnp.zeros((n_jobs,)).at[statics.f2j]
+            .add(st.proto.det.bytes_ratio) / flows_per_job)
+
+
+# name -> capture(cfg, statics, st, ticks_per_chunk); insertion order is the
+# RawSimOutput field order (trace_util .. trace_ratio).  These are the
+# always-on chunk-averaged channels the engine emitted before the probe
+# subsystem existed; the expressions are kept identical so telemetry-off
+# outputs stay bit-for-bit.
+CHUNK_PROBES: dict[str, Callable] = {
+    "trace_util": lambda cfg, statics, st, tpc: st.acc_util / tpc,
+    "trace_drops": lambda cfg, statics, st, tpc: st.acc_drops,
+    "trace_marks": lambda cfg, statics, st, tpc: st.acc_marks,
+    "trace_incomm": lambda cfg, statics, st, tpc: st.in_comm,
+    "trace_t": lambda cfg, statics, st, tpc:
+        st.tick.astype(jnp.float32) * cfg.dt,
+    "trace_jobtput": lambda cfg, statics, st, tpc:
+        st.acc_jobbytes / (tpc * cfg.dt),
+    "trace_ratio": _trace_ratio,
+}
+
+
+def chunk_capture(cfg, statics, st, ticks_per_chunk) -> tuple:
+    """The per-chunk trace outputs, in `RawSimOutput` field order."""
+    return tuple(fn(cfg, statics, st, ticks_per_chunk)
+                 for fn in CHUNK_PROBES.values())
+
+
+# ---------------------------------------------------------------------------
+# Host-side view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TelemetryResult:
+    """Numpy-side view of one run's telemetry (attached to `SimResult`).
+
+    ``series[name]`` is [S, *shape] in chronological sample order and
+    ``t``/``ticks`` are the matching sample times; padded fabrics are
+    trimmed to the point's own flows/jobs.  Detector outputs are floats
+    (inf = the run never converged; nan = detector unarmed).
+    """
+
+    spec: TelemetrySpec
+    t: np.ndarray                     # [S] seconds
+    ticks: np.ndarray                 # [S] int32
+    series: dict[str, np.ndarray]     # name -> [S, ...]
+    n_samples: int
+    # interleave detector
+    time_to_interleave_s: float = float("nan")
+    time_to_interleave_iters: float = float("nan")
+    interleave_stability: float = float("nan")
+    converged: bool = False
+    # iteration-time sketch
+    iter_hist: Optional[np.ndarray] = None    # [J, B]
+    bin_edges: Optional[np.ndarray] = None    # [B + 1] seconds
+
+    def timeline(self, probe: str) -> tuple[np.ndarray, np.ndarray]:
+        """(t, values) for one armed probe's decimated series."""
+        if probe not in self.series:
+            raise KeyError(f"probe {probe!r} was not armed "
+                           f"(armed: {', '.join(self.series)})")
+        return self.t, self.series[probe]
+
+    def iter_quantile(self, q: float, job: Optional[int] = None) -> float:
+        """Streaming quantile of iteration times from the log-histogram
+        sketch (accurate to one bin width — ~20% at the default 64 bins
+        over 6 decades).  job=None pools all jobs."""
+        if self.iter_hist is None:
+            raise ValueError("iter_sketch detector was not armed")
+        h = (self.iter_hist.sum(axis=0) if job is None
+             else self.iter_hist[job])
+        total = int(h.sum())
+        if total == 0:
+            return float("nan")
+        idx = int(np.searchsorted(np.cumsum(h), q * total, side="left"))
+        idx = min(idx, h.shape[0] - 1)
+        centers = np.sqrt(self.bin_edges[:-1] * self.bin_edges[1:])
+        return float(centers[idx])
+
+    @property
+    def p50_iter(self) -> float:
+        return self.iter_quantile(0.50)
+
+    @property
+    def p99_iter(self) -> float:
+        return self.iter_quantile(0.99)
+
+
+def collect(cfg, state: TelemetryState,
+            n_jobs: Optional[int] = None) -> TelemetryResult:
+    """Convert one run's final `TelemetryState` into a `TelemetryResult`.
+
+    ``cfg`` is the *point's own* config (unpadded): flow-kind series are
+    trimmed to its flow count and job-kind series to ``n_jobs`` (padded
+    groups put the point's flows/jobs in a prefix — DESIGN.md §5).
+    """
+    spec = cfg.telemetry
+    ticks = np.asarray(state.sample_tick)
+    valid = np.nonzero(ticks >= 0)[0]
+    order = valid[np.argsort(ticks[valid], kind="stable")]
+    n = cfg.jobs.n_jobs if n_jobs is None else n_jobs
+    n_flows = cfg.topo.n_flows
+    series = {}
+    for name in spec.probes:
+        buf = np.asarray(state.series[name])[order]
+        kind = PROBES[name].kind
+        if kind == "flow":
+            buf = buf[:, :n_flows]
+        elif kind == "job":
+            buf = buf[:, :n]
+        series[name] = buf
+
+    out = TelemetryResult(
+        spec=spec, t=ticks[order].astype(np.float64) * cfg.dt,
+        ticks=ticks[order], series=series,
+        n_samples=int(np.asarray(state.n_samples)))
+
+    if spec.needs_interleave():
+        last_bad = int(np.asarray(state.last_bad_tick))
+        hold = int(round(spec.hold_frac * cfg.n_ticks))
+        tail_n = int(np.asarray(state.tail_ticks))
+        out.interleave_stability = (
+            1.0 - int(np.asarray(state.tail_bad)) / tail_n if tail_n
+            else float("nan"))
+        if last_bad < 0:
+            out.converged = True
+            out.time_to_interleave_s = 0.0
+            out.time_to_interleave_iters = 0.0
+        elif last_bad < cfg.n_ticks - hold:
+            out.converged = True
+            out.time_to_interleave_s = (last_bad + 1) * cfg.dt
+            out.time_to_interleave_iters = float(
+                np.asarray(state.iters_at_last_bad))
+        else:
+            out.converged = False
+            out.time_to_interleave_s = float("inf")
+            out.time_to_interleave_iters = float("inf")
+
+    if spec.needs_sketch():
+        out.iter_hist = np.asarray(state.iter_hist)[:n]
+        b = spec.sketch_bins
+        out.bin_edges = spec.sketch_lo * (
+            spec.sketch_hi / spec.sketch_lo) ** (np.arange(b + 1) / b)
+    return out
