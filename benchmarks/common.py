@@ -102,9 +102,13 @@ def plan(build, *, name: str = "", where=None, **axes) -> netsim.Plan:
 
 # Per-suite fusion/cache health, accumulated across every plan a suite runs
 # (suites may run several); `timed` resets it per benchmark and attaches the
-# totals to the BenchResult so run.py can print + merge them.
+# totals to the BenchResult so run.py can print + merge them.  The last
+# three keys are the static analyzer's verdict: compile groups the plan
+# lint predicted before the run, plans whose executed group count diverged
+# from that prediction, and non-info plan-lint findings (avoidable splits).
 _PLAN_HEALTH = {"n_kernel_fallbacks": 0, "n_cache_hits": 0,
-                "n_compile_groups": 0}
+                "n_compile_groups": 0, "n_groups_predicted": 0,
+                "n_group_mispredicts": 0, "n_plan_findings": 0}
 
 
 def reset_plan_health() -> None:
@@ -118,11 +122,30 @@ def plan_health() -> dict:
 
 def run_plan(p: netsim.Plan, **kw) -> netsim.PlanResult:
     """Execute a plan (thin wrapper so suites share one entry point and
-    their fusion/cache health aggregates per suite)."""
+    their fusion/cache health aggregates per suite).
+
+    Each execution is preceded by the plan lint: the predicted compile
+    groups and any non-info findings land in the suite's health block, and
+    an executed group count that diverges from the prediction is counted
+    as a mispredict — the benchmarks continuously cross-validate the
+    static analyzer against reality.
+    """
+    from repro.analysis import plan_lint
+
+    findings, facts = plan_lint.lint_plan(
+        p, label=p.name or "plan", pad_jobs=kw.get("pad_jobs", True),
+        telemetry=kw.get("telemetry"))
+    predicted = facts["groups"]
+
     pr = netsim.run_plan(p, **kw)
     _PLAN_HEALTH["n_kernel_fallbacks"] += pr.n_kernel_fallbacks
     _PLAN_HEALTH["n_cache_hits"] += pr.n_cache_hits
     _PLAN_HEALTH["n_compile_groups"] += pr.n_compile_groups
+    _PLAN_HEALTH["n_groups_predicted"] += predicted
+    _PLAN_HEALTH["n_group_mispredicts"] += int(
+        predicted != pr.n_compile_groups)
+    _PLAN_HEALTH["n_plan_findings"] += sum(
+        1 for f in findings if f.effective_severity != "info")
     return pr
 
 

@@ -41,6 +41,13 @@ def _plan(use_kernel: bool, job_counts) -> netsim.Plan:
                        seed=common.seed_axis())
 
 
+def make_plan(use_kernel: bool = True, job_counts=(2, 3)) -> netsim.Plan:
+    """The kernel-mode plan (default: fused).  `repro.analysis --plan
+    kernel_sweep` lints this lowering to prove the pallas_call is present —
+    the static form of the suite's `n_kernel_fallbacks == 0` assert."""
+    return _plan(use_kernel, job_counts)
+
+
 def _timed_plan(use_kernel: bool, job_counts) -> tuple[float, int, int]:
     """(steady-state seconds, total ticks, kernel fallbacks) for one mode.
 

@@ -22,33 +22,40 @@ from repro import netsim, workload
 STATIC_FACTORS = np.asarray([1.3, 1.0, 0.7])
 
 
-def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
-    topo = netsim.dumbbell(3, sockets_per_job=2)
+def _profs_for(cs):
     base_prof = workload.profile_for("gpt2")
+    return [base_prof.compute_scaled(cs) for _ in range(3)]
 
-    def profs_for(cs):
-        return [base_prof.compute_scaled(cs) for _ in range(3)]
+
+def make_plan(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> netsim.Plan:
+    """The fig13 grid as a plan, buildable without running (lintable via
+    `repro.analysis --plan fig13`)."""
+    topo = netsim.dumbbell(3, sockets_per_job=2)
 
     def build(pt):
         # Static [67]: constant per-job factors replace F; needs a non-OFF
         # variant so the factors reach the increase hook
         variant = "OFF" if pt["scheme"] == "base" else "WI"
         return common.build_cfg(
-            topo, profs_for(pt["cs"]), common.protocol("dcqcn", variant),
+            topo, _profs_for(pt["cs"]), common.protocol("dcqcn", variant),
             static_job_factors=(STATIC_FACTORS if pt["scheme"] == "static"
                                 else None))
 
-    pr = common.run_plan(common.plan(
+    return common.plan(
         build, name="fig13",
         cs=tuple(compute_scales), scheme=("base", "mlqcn", "static"),
-        seed=common.seed_axis()))
+        seed=common.seed_axis())
+
+
+def run(compute_scales=(1.5, 1.0, 0.7, 0.45, 0.25)) -> tuple[dict, int]:
+    pr = common.run_plan(make_plan(compute_scales))
     assert pr.n_compile_groups <= 2, pr.n_compile_groups
     assert pr.n_kernel_fallbacks == 0
     out = {}
     for cs in compute_scales:
         compat = workload.compatibility_score(
-            profs_for(cs)[0].scaled(common.WORK_SCALE),
-            profs_for(cs)[1].scaled(common.WORK_SCALE))
+            _profs_for(cs)[0].scaled(common.WORK_SCALE),
+            _profs_for(cs)[1].scaled(common.WORK_SCALE))
         base = pr.select(cs=cs, scheme="base")
         sp_ml = netsim.sweep_speedup_stats(base,
                                            pr.select(cs=cs, scheme="mlqcn"))

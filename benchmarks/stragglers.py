@@ -17,7 +17,9 @@ from benchmarks import common
 from repro import netsim, workload
 
 
-def run(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> tuple[dict, int]:
+def make_plan(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> netsim.Plan:
+    """The fig12 grid as a plan, buildable without running (the static
+    analyzer lints exactly this object via `repro.analysis --plan fig12`)."""
     topo = netsim.dumbbell(2, sockets_per_job=2)
     profs = common.gpt2(2)
     sched, _ = workload.cassini_schedule(
@@ -29,11 +31,15 @@ def run(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> tuple[dict, int]:
             topo, profs, common.protocol("dcqcn", variant),
             cassini=sched if pt["scheme"] == "cassini" else None)
 
-    pr = common.run_plan(common.plan(
+    return common.plan(
         build, name="fig12",
         p=netsim.Axis("p", tuple(probs), field="straggle_prob"),
         scheme=("base", "mlqcn", "cassini"),
-        seed=common.seed_axis()))
+        seed=common.seed_axis())
+
+
+def run(probs=(0.0, 0.05, 0.10, 0.20, 0.30)) -> tuple[dict, int]:
+    pr = common.run_plan(make_plan(probs))
     assert pr.n_compile_groups <= 2, pr.n_compile_groups
     assert pr.n_kernel_fallbacks == 0
     out = {}

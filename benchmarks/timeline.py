@@ -110,7 +110,9 @@ def _summarize(algo: str, base: list[netsim.SimResult],
 SOCKETS = {"reno": 2, "cubic": 2, "dcqcn": 1}
 
 
-def run(algos=("reno", "cubic", "dcqcn"), sockets=None) -> tuple[dict, int]:
+def make_plan(algos=("reno", "cubic", "dcqcn"), sockets=None) -> netsim.Plan:
+    """The fig5 grid as a plan (lintable via `repro.analysis --plan fig5`;
+    the analyzer stamps `telemetry_spec()` on to lint the armed lowering)."""
     profs = common.gpt2(2)
 
     def build(pt):
@@ -119,10 +121,14 @@ def run(algos=("reno", "cubic", "dcqcn"), sockets=None) -> tuple[dict, int]:
         return common.build_cfg(topo, profs,
                                 common.protocol(pt["algo"], pt["variant"]))
 
-    pr = common.run_plan(common.plan(
+    return common.plan(
         build, name="fig5-timeline",
-        algo=tuple(algos), variant=("OFF", "WI"), seed=common.seed_axis()),
-        telemetry=telemetry_spec(), profile=True)
+        algo=tuple(algos), variant=("OFF", "WI"), seed=common.seed_axis())
+
+
+def run(algos=("reno", "cubic", "dcqcn"), sockets=None) -> tuple[dict, int]:
+    pr = common.run_plan(make_plan(algos, sockets),
+                         telemetry=telemetry_spec(), profile=True)
     out = {algo: _summarize(algo,
                             pr.select(algo=algo, variant="OFF"),
                             pr.select(algo=algo, variant="WI"))

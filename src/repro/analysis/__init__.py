@@ -1,0 +1,31 @@
+"""repro.analysis — the three-layer static verifier.
+
+Proves, before anything executes: the fused Pallas CC-tick kernel is in
+every lowering that claims it (IR lint), every compile-group split is
+explained and the prediction matches what the jit cache actually traces
+(plan lint), and the sources are free of the bug patterns that break
+tracing — np-in-scan, concretized tracers, f64 leaks, unit-suffix mixups
+(source lint).  One report, one CLI::
+
+    PYTHONPATH=src python -m repro.analysis --ci --plan fig12
+
+See DESIGN.md §7 for the architecture and the full rule catalog.
+"""
+from repro.analysis.findings import (AnalysisReport, Finding, Rule, RULES,
+                                     make_finding)
+from repro.analysis.jaxpr_lint import (kernel_expectation, lint_closed_jaxpr,
+                                       lint_sweep)
+from repro.analysis.plan_lint import (lint_plan, predict_compile_groups,
+                                      STRUCTURAL_FIELDS)
+from repro.analysis.plans import CI_PLANS, PLANS, resolve_entry
+from repro.analysis.runner import analyze_plan, run_analysis
+from repro.analysis.source_lint import lint_paths, lint_sources
+
+__all__ = [
+    "AnalysisReport", "Finding", "Rule", "RULES", "make_finding",
+    "kernel_expectation", "lint_closed_jaxpr", "lint_sweep",
+    "lint_plan", "predict_compile_groups", "STRUCTURAL_FIELDS",
+    "CI_PLANS", "PLANS", "resolve_entry",
+    "analyze_plan", "run_analysis",
+    "lint_paths", "lint_sources",
+]

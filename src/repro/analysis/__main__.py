@@ -1,0 +1,44 @@
+"""CLI: ``python -m repro.analysis [--ci] [--plan <suite>] [...]``.
+
+* no flags — source lint only (fast; no benchmark imports);
+* ``--plan fig12`` (repeatable) — also statically verify that suite's
+  lowerings (registry names: see `repro.analysis.plans.PLANS`);
+* ``--ci`` — the gate: defaults the plan set to `CI_PLANS`, treats the
+  process as cold (strict groups-predicted == groups-traced proof) and
+  exits 1 on any error-severity finding.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static verifier: IR lint, plan lint, source lint")
+    ap.add_argument("--ci", action="store_true",
+                    help="gate mode: default plan set, strict cold-trace "
+                         "proof, exit 1 on errors")
+    ap.add_argument("--plan", action="append", default=[],
+                    metavar="SUITE", help="lint a named plan (repeatable)")
+    ap.add_argument("--no-source", action="store_true",
+                    help="skip the source lint layer")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info-severity findings")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import CI_PLANS, run_analysis
+
+    plan_names = list(args.plan)
+    if args.ci and not plan_names:
+        plan_names = list(CI_PLANS)
+
+    report = run_analysis(plan_names, source=not args.no_source,
+                          expect_cold=args.ci)
+    print(report.render(verbose=args.verbose))
+    return 1 if (args.ci and not report.ok()) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

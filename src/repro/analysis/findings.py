@@ -1,0 +1,193 @@
+"""Finding records and the analysis report — the one output surface all
+three lint layers (IR, plan, source) emit into.
+
+A `Finding` is a structured diagnostic: a rule id (``layer/rule-name``), a
+severity, a location string (``file:line`` for source findings, a
+``plan/group`` label for IR and plan findings) and a human message.  The
+`AnalysisReport` aggregates findings plus per-plan *proofs* — the positive
+facts the verifier established (kernel present in N groups, groups
+predicted == groups traced, zero f64 ops) — and renders both; ``--ci``
+exits nonzero iff any error-severity finding survives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["Severity", "Finding", "Rule", "AnalysisReport", "RULES",
+           "rule", "make_finding"]
+
+# Severity order (render sorts errors first).
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+Severity = str
+_SEV_ORDER = {ERROR: 0, WARNING: 1, INFO: 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One catalog entry: what a rule proves and why it matters."""
+
+    id: str                 # "ir/f64-promotion"
+    severity: Severity      # default severity of its findings
+    summary: str            # one line, shown in renders
+    rationale: str          # why violating it invalidates results
+
+
+# The full rule catalog.  DESIGN.md §7 documents each entry; tests assert
+# every rule here fires on a deliberately-broken fixture.
+RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, severity: Severity, summary: str, rationale: str) -> Rule:
+    r = Rule(id=id, severity=severity, summary=summary, rationale=rationale)
+    if id in RULES:
+        raise ValueError(f"duplicate rule id {id!r}")
+    RULES[id] = r
+    return r
+
+
+# --- IR layer -------------------------------------------------------------
+rule("ir/kernel-missing", ERROR,
+     "fused CC-tick kernel absent from a kernel-enabled lowering",
+     "use_pallas_kernel=True must place the Pallas mltcp_cc_tick "
+     "pallas_call inside the tick scan; its absence means the sweep runs "
+     "the jnp oracle (perf claims about the fused path are void).")
+rule("ir/kernel-fallback", ERROR,
+     "config statically forces the kernel->oracle fallback",
+     "non-default favoritism / non-linear F are outside the kernel's "
+     "specialization; requesting use_pallas_kernel for such a config "
+     "can only ever run unfused — fix the config or drop the flag.")
+rule("ir/kernel-unexpected", WARNING,
+     "pallas_call present in a kernel-disabled lowering",
+     "a program that was asked for the jnp oracle must not dispatch the "
+     "kernel; oracle-vs-kernel bit-equality checks depend on it.")
+rule("ir/f64-promotion", ERROR,
+     "float64 value or convert_element_type to f64 in the lowered program",
+     "the engine and kernel are pinned bit-stable in f32; a silent f64 "
+     "promotion (e.g. under jax_enable_x64) breaks kernel/oracle "
+     "bit-equality and doubles memory traffic.")
+rule("ir/host-callback", ERROR,
+     "host callback / debug print / io callback in the hot path",
+     "callbacks inside the tick scan force device->host syncs every "
+     "iteration — timing figures measured with one in place are invalid.")
+rule("ir/nested-control", ERROR,
+     "non-whitelisted while/cond inside the tick-scan body",
+     "the tick body is straight-line vectorized math; a stray lax.cond / "
+     "while_loop usually means a python branch escaped tracing and will "
+     "serialize the vmapped sweep.")
+
+# --- plan layer -----------------------------------------------------------
+rule("plan/group-split", INFO,
+     "two plan points compile separately (group-split explainer)",
+     "every extra compile group is an extra trace+compile; the explainer "
+     "names the exact canonicalized fields that differ so splits are "
+     "always accounted for.")
+rule("plan/avoidable-split", WARNING,
+     "compile-group split on value-only fields",
+     "the differing fields are plain numeric values that could ride the "
+     "batched sweep as traced SweepParams leaves (the PR-4 pattern); the "
+     "split wastes traces.")
+rule("plan/group-mismatch", ERROR,
+     "predicted compile groups != programs actually traced",
+     "grouping canonicalization and the jit static signature disagree — "
+     "either the canonicalizer merges points the jit cache splits "
+     "(silent retraces) or vice versa.")
+rule("plan/retrace", ERROR,
+     "re-tracing an already-traced compile group",
+     "a warm group must hit the jaxpr cache; a retrace means something "
+     "unhashable or dynamic leaked into the static config signature.")
+
+# --- source layer ---------------------------------------------------------
+rule("src/np-in-scan", ERROR,
+     "numpy call in a function reachable from a scan body",
+     "np.* inside traced code either fails under vmap/jit or silently "
+     "constant-folds per trace; scan bodies must be pure jnp. "
+     "Trace-time constants on static shapes may be whitelisted inline.")
+rule("src/float-cast-traced", ERROR,
+     "python float()/int()/bool() applied to a traced value",
+     "concretizing a tracer raises under jit, or — worse — bakes a "
+     "trace-time constant into the program so sweeps silently reuse the "
+     "first point's value.")
+rule("src/branch-on-traced", ERROR,
+     "python `if` on a traced value inside traced code",
+     "python control flow on tracers raises ConcretizationTypeError "
+     "under jit; use jnp.where / lax.cond.")
+rule("src/f64-literal", ERROR,
+     "float64 literal outside NumPy-side config plumbing",
+     "jnp.float64 / astype('float64') in traced code promotes the "
+     "bit-stable f32 pipeline; np.float64 is fine only in numpy-side "
+     "config plumbing (JobSpec.simple style) that never reaches a scan.")
+rule("src/unit-suffix", ERROR,
+     "add/subtract/compare across conflicting unit suffixes",
+     "names suffixed _bytes/_s/_bps/_ticks carry units; summing or "
+     "comparing across units (without a converting multiply/divide) is "
+     "the classic silent protocol-parameter bug the RoCE CC sensitivity "
+     "studies warn about.")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic from any lint layer."""
+
+    rule: str               # a RULES key
+    where: str              # "src/...py:123" | "fig12/group0" | plan name
+    message: str
+    severity: Optional[Severity] = None   # None: the rule's default
+
+    @property
+    def effective_severity(self) -> Severity:
+        if self.severity is not None:
+            return self.severity
+        return RULES[self.rule].severity
+
+
+def make_finding(rule_id: str, where: str, message: str,
+                 severity: Optional[Severity] = None) -> Finding:
+    if rule_id not in RULES:
+        raise KeyError(f"unknown rule {rule_id!r}")
+    return Finding(rule=rule_id, where=where, message=message,
+                   severity=severity)
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Findings from every layer plus the positive proofs per analyzed plan."""
+
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    # plan/fixture name -> established facts, e.g. {"groups_predicted": 2,
+    # "groups_traced": 2, "kernel_groups_proven": 1, "f64_ops": 0}
+    proofs: dict = dataclasses.field(default_factory=dict)
+
+    def extend(self, findings) -> None:
+        self.findings.extend(findings)
+
+    def errors(self) -> list[Finding]:
+        return [f for f in self.findings if f.effective_severity == ERROR]
+
+    def warnings(self) -> list[Finding]:
+        return [f for f in self.findings if f.effective_severity == WARNING]
+
+    def ok(self) -> bool:
+        return not self.errors()
+
+    def render(self, verbose: bool = False) -> str:
+        lines = []
+        shown = sorted(
+            self.findings,
+            key=lambda f: (_SEV_ORDER[f.effective_severity], f.rule, f.where))
+        if not verbose:
+            shown = [f for f in shown if f.effective_severity != INFO]
+        for f in shown:
+            lines.append(f"{f.effective_severity.upper():7s} {f.rule:24s} "
+                         f"{f.where}: {f.message}")
+        for name in sorted(self.proofs):
+            facts = self.proofs[name]
+            body = ", ".join(f"{k}={v}" for k, v in facts.items())
+            lines.append(f"PROOF   {name}: {body}")
+        n_err, n_warn = len(self.errors()), len(self.warnings())
+        n_info = len(self.findings) - n_err - n_warn
+        lines.append(f"== {n_err} errors, {n_warn} warnings, {n_info} info; "
+                     f"{'FAIL' if n_err else 'PASS'}")
+        return "\n".join(lines)

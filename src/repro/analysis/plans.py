@@ -1,0 +1,77 @@
+"""Named lintable plans: the figure suites' grids, resolvable without
+running them.
+
+Each entry lazily imports its benchmark suite and calls its
+``make_plan()`` factory — benchmarks live outside ``src`` (repo-root
+``benchmarks/``), so the registry only works from a repo checkout; the
+error message says so instead of a bare ImportError.  ``CI_PLANS`` is the
+set the ``--ci`` gate proves on every push.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+__all__ = ["PlanEntry", "PLANS", "CI_PLANS", "resolve_entry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    name: str
+    factory: Callable                        # () -> netsim.Plan
+    telemetry: Optional[Callable] = None     # () -> TelemetrySpec, if armed
+    lint_unarmed: bool = False               # also lint the unarmed lowering
+
+
+def _fig12():
+    from benchmarks import stragglers
+    return stragglers.make_plan()
+
+
+def _fig13():
+    from benchmarks import partial_compat
+    return partial_compat.make_plan()
+
+
+def _fig5():
+    from benchmarks import timeline
+    return timeline.make_plan()
+
+
+def _fig5_telemetry():
+    from benchmarks import timeline
+    return timeline.telemetry_spec()
+
+
+def _kernel_sweep():
+    from benchmarks import kernel_sweep
+    return kernel_sweep.make_plan()
+
+
+PLANS: dict[str, PlanEntry] = {
+    "fig12": PlanEntry("fig12", _fig12),
+    "fig13": PlanEntry("fig13", _fig13),
+    # fig5 runs armed (probe ring buffers in the scan state); lint both the
+    # armed and unarmed programs — telemetry must not perturb either proof
+    "fig5": PlanEntry("fig5", _fig5, telemetry=_fig5_telemetry,
+                      lint_unarmed=True),
+    "kernel_sweep": PlanEntry("kernel_sweep", _kernel_sweep),
+}
+
+CI_PLANS = ("fig12", "fig13", "fig5", "kernel_sweep")
+
+
+def resolve_entry(name: str):
+    """-> (plan, telemetry_spec_or_None, lint_unarmed) for a registry name."""
+    if name not in PLANS:
+        raise KeyError(
+            f"unknown plan {name!r}; known: {', '.join(sorted(PLANS))}")
+    entry = PLANS[name]
+    try:
+        plan = entry.factory()
+    except ImportError as e:
+        raise ImportError(
+            f"plan {name!r} needs the repo-root `benchmarks/` package on "
+            f"sys.path (run from a repo checkout): {e}") from e
+    telemetry = entry.telemetry() if entry.telemetry is not None else None
+    return plan, telemetry, entry.lint_unarmed

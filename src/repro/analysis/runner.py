@@ -1,0 +1,124 @@
+"""Drive the three lint layers over a plan set and assemble the report.
+
+Per plan (and, for armed suites, per arming variant):
+
+1. plan lint — predict compile groups, explain/judge every split;
+2. IR lint — trace each predicted group's program (`engine.trace_sweep`,
+   never executing) and prove kernel presence, f32-only, no callbacks, no
+   stray control flow;
+3. accounting — `counters.watch` around the traces cross-checks the
+   prediction (``plan/group-mismatch`` when the jit cache disagrees) and a
+   deliberate re-trace of group 0 proves the cache is warm afterwards
+   (``plan/retrace`` otherwise).
+
+``expect_cold=True`` (the CLI/CI path: fresh process) hardens the
+cross-check into the strict proof groups_predicted == groups_traced; in a
+warm process (tests, benchmark reuse) only traces *above* the prediction
+are an error — cache hits from earlier work are legitimate.
+"""
+from __future__ import annotations
+
+from repro.analysis import jaxpr_lint, plan_lint, source_lint
+from repro.analysis.findings import AnalysisReport, make_finding
+
+__all__ = ["analyze_plan", "run_analysis"]
+
+
+def _analyze_variant(label: str, plan, telemetry, *, pad_jobs: bool,
+                     expect_cold: bool, whitelist: frozenset,
+                     report: AnalysisReport) -> None:
+    from repro.netsim import counters, engine, experiment
+
+    findings, pfacts = plan_lint.lint_plan(
+        plan, label=label, pad_jobs=pad_jobs, telemetry=telemetry)
+    report.extend(findings)
+    points, cfgs, overrides, groups = pfacts.pop("_resolved")
+
+    kernel_proven = f64_total = pallas_total = 0
+    with counters.watch() as w:
+        for gi, group in enumerate(groups):
+            sweep = experiment.group_sweep(cfgs, overrides, group)
+            gf, gfacts = jaxpr_lint.lint_sweep(
+                group.cfg, sweep, label=f"{label}/group{gi}",
+                whitelist=whitelist)
+            report.extend(gf)
+            f64_total += gfacts["f64_ops"]
+            pallas_total += gfacts["pallas_calls"]
+            if gfacts["expectation"] == "fused" and gfacts["pallas_calls"]:
+                kernel_proven += 1
+    traced, fallbacks = w.traces, w.fallbacks
+
+    if traced > len(groups):
+        report.extend([make_finding(
+            "plan/group-mismatch", label,
+            f"predicted {len(groups)} compile group(s) but tracing them "
+            f"took {traced} traces — the grouping canonicalizer merges "
+            f"points the jit static signature splits")])
+    elif expect_cold and traced != len(groups):
+        report.extend([make_finding(
+            "plan/group-mismatch", label,
+            f"predicted {len(groups)} compile group(s) but a cold process "
+            f"traced only {traced} — groups share a jit cache entry, so "
+            f"the canonicalizer splits points it could merge")])
+
+    if groups:
+        sweep0 = experiment.group_sweep(cfgs, overrides, groups[0])
+        with counters.watch() as w2:
+            engine.trace_sweep(groups[0].cfg, sweep0)
+        if w2.traces:
+            report.extend([make_finding(
+                "plan/retrace", f"{label}/group0",
+                "re-tracing an already-traced group missed the jaxpr "
+                "cache — something unhashable or dynamic is in the "
+                "static config signature")])
+
+    report.proofs[label] = {
+        "points": len(points),
+        "groups_predicted": len(groups),
+        "groups_traced": traced,
+        "kernel_groups_expected":
+            sum(1 for g in groups
+                if jaxpr_lint.kernel_expectation(
+                    g.cfg, experiment.group_sweep(cfgs, overrides, g))
+                == "fused"),
+        "kernel_groups_proven": kernel_proven,
+        "pallas_calls": pallas_total,
+        "f64_ops": f64_total,
+        "kernel_fallbacks": fallbacks,
+        "wasted_traces_estimate": pfacts["wasted_traces_estimate"],
+    }
+
+
+def analyze_plan(name: str, plan, *, telemetry=None, lint_unarmed=False,
+                 pad_jobs: bool = True, expect_cold: bool = False,
+                 whitelist: frozenset = frozenset(),
+                 report: AnalysisReport = None) -> AnalysisReport:
+    """All three static proofs for one plan; returns/extends the report."""
+    if report is None:
+        report = AnalysisReport()
+    variants = [(name, telemetry)]
+    if telemetry is not None and lint_unarmed:
+        variants.append((f"{name}[unarmed]", None))
+    for label, telem in variants:
+        _analyze_variant(label, plan, telem, pad_jobs=pad_jobs,
+                         expect_cold=expect_cold, whitelist=whitelist,
+                         report=report)
+    return report
+
+
+def run_analysis(plan_names=(), *, source: bool = True,
+                 expect_cold: bool = False) -> AnalysisReport:
+    """The CLI entry: named plans (registry) + the source lint."""
+    from repro.analysis import plans as plan_registry
+
+    report = AnalysisReport()
+    for name in plan_names:
+        plan, telemetry, lint_unarmed = plan_registry.resolve_entry(name)
+        analyze_plan(name, plan, telemetry=telemetry,
+                     lint_unarmed=lint_unarmed, expect_cold=expect_cold,
+                     report=report)
+    if source:
+        findings, facts = source_lint.lint_paths()
+        report.extend(findings)
+        report.proofs["source"] = facts
+    return report

@@ -1,0 +1,512 @@
+"""Source lint: AST rules over the engine/core/kernel packages.
+
+The IR lint proves properties of programs we can trace; this layer catches
+the bug *patterns* in the Python source itself, including code paths no CI
+plan exercises.  It builds a light call graph per run:
+
+1. parse every module under the scan roots, recording import aliases,
+   function definitions (methods and nested defs included) and, per
+   function, local bindings of callables (``tick_fn = core.cc_tick``,
+   ``tick = partial(_tick, ...)``);
+2. find every ``lax.scan`` / ``fori_loop`` / ``while_loop`` / ``cond``
+   call and resolve its body argument(s) to project functions — the *loop
+   roots*;
+3. BFS the call graph from the roots: everything reached is
+   *scan-reachable*, i.e. runs inside traced loop bodies every tick.
+
+Rules then split by context.  Scan-reachable functions must not call
+``np.*`` (``src/np-in-scan``) or touch float64 (``src/f64-literal`` for
+``np.float64`` / ``"float64"``); ``jnp.float64`` is flagged everywhere.
+Everywhere we flag ``float()/int()/bool()`` on values inferred traced
+(``src/float-cast-traced``), python ``if`` on traced values
+(``src/branch-on-traced``) and unit-suffix conflicts in arithmetic and
+comparisons (``src/unit-suffix``: ``_bytes`` vs ``_s`` vs ``_bps`` vs
+``_ticks``).
+
+False-positive escape hatch: an inline pragma on the offending line —
+``# lint: allow(np-in-scan)`` — suppresses that rule for that line (the
+one legitimate case in-tree is telemetry's trace-time-static
+``np.triu_indices`` pair index; see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis.findings import Finding, make_finding
+
+__all__ = ["lint_paths", "lint_sources", "DEFAULT_SCAN_DIRS"]
+
+# Packages whose sources the default lint run scans.
+DEFAULT_SCAN_DIRS = ("repro/core", "repro/netsim", "repro/kernels")
+
+_PRAGMA = re.compile(r"#\s*lint:\s*allow\(([a-z0-9/_-]+(?:\s*,\s*[a-z0-9/_-]+)*)\)")
+
+# jax-ish roots: calls on these produce traced values / host loop bodies.
+_JAX_MODULES = ("jax", "jax.numpy", "jax.lax")
+_NUMPY_MODULES = ("numpy",)
+
+# loop primitive -> positional indices of its function-valued args
+_LOOP_BODY_ARGS = {
+    "scan": (0,), "fori_loop": (2,), "while_loop": (0, 1),
+    "cond": (1, 2), "switch": None,   # switch: all args from 1 on
+}
+
+_UNIT_SUFFIXES = (("_bytes_per_s", "bps"), ("_bps", "bps"),
+                  ("_bytes", "bytes"), ("_ticks", "ticks"), ("_s", "s"))
+
+
+def _unit_of(name: str) -> Optional[str]:
+    for suf, unit in _UNIT_SUFFIXES:
+        if name.endswith(suf):
+            return unit
+    return None
+
+
+@dataclasses.dataclass
+class _Module:
+    name: str                                 # dotted, e.g. repro.core.mltcp
+    filename: str                             # display path for findings
+    tree: ast.Module
+    lines: list[str]
+    imports: dict = dataclasses.field(default_factory=dict)       # alias -> module
+    from_imports: dict = dataclasses.field(default_factory=dict)  # name -> (mod, orig)
+    functions: dict = dataclasses.field(default_factory=dict)     # qual -> node
+
+
+def _module_name(path: Path) -> str:
+    parts = list(path.with_suffix("").parts)
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    # keep at most the package-relative tail
+    for root in ("repro",):
+        if root in parts:
+            parts = parts[parts.index(root):]
+            break
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) or path.stem
+
+
+def _collect_module(name: str, filename: str, source: str) -> _Module:
+    mod = _Module(name=name, filename=filename,
+                  tree=ast.parse(source), lines=source.splitlines())
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.imports[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                mod.from_imports[a.asname or a.name] = (node.module, a.name)
+
+    def visit(node, qual):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}.{child.name}" if qual else child.name
+                mod.functions[q] = child
+                visit(child, q)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{qual}.{child.name}" if qual else child.name)
+            else:
+                visit(child, qual)
+
+    visit(mod.tree, "")
+    return mod
+
+
+class _Index:
+    """Cross-module function index + best-effort call resolution."""
+
+    def __init__(self, modules: list[_Module]):
+        self.modules = {m.name: m for m in modules}
+        # global key "modname:qual" -> function node
+        self.table = {}
+        for m in modules:
+            for q, node in m.functions.items():
+                self.table[f"{m.name}:{q}"] = node
+
+    def _project_key(self, modname: str, fn: str) -> Optional[str]:
+        """Resolve (module-ish name, function) to a table key, following
+        package re-exports (repro.core:cc_tick -> repro.core.mltcp:cc_tick)."""
+        key = f"{modname}:{fn}"
+        if key in self.table:
+            return key
+        prefix = modname + "."
+        for m in self.modules.values():
+            if m.name.startswith(prefix) and fn in m.functions:
+                return f"{m.name}:{fn}"
+        return None
+
+    def _root_module(self, mod: _Module, alias: str) -> Optional[str]:
+        if alias in mod.imports:
+            return mod.imports[alias]
+        if alias in mod.from_imports:
+            src, orig = mod.from_imports[alias]
+            return f"{src}.{orig}"      # `from repro.netsim import telemetry`
+        return None
+
+    def is_jaxish(self, mod: _Module, alias: str) -> bool:
+        tgt = self._root_module(mod, alias)
+        return tgt is not None and (tgt in _JAX_MODULES
+                                    or tgt.startswith("jax."))
+
+    def is_numpy(self, mod: _Module, alias: str) -> bool:
+        tgt = self._root_module(mod, alias)
+        return tgt in _NUMPY_MODULES
+
+    def resolve_callable(self, mod: _Module, qual: str, expr,
+                         bindings: dict) -> set:
+        """Project-function keys an expression may denote (empty if none).
+
+        Handles: bare names (local bindings -> enclosing nested defs ->
+        module functions -> from-imports), ``mod.attr`` on imported project
+        modules, and ``partial(f, ...)``.
+        """
+        if isinstance(expr, ast.Name):
+            n = expr.id
+            if n in bindings:
+                return set(bindings[n])
+            # nested def in the enclosing function chain
+            scope = qual
+            while scope:
+                q = f"{scope}.{n}"
+                if q in mod.functions:
+                    return {f"{mod.name}:{q}"}
+                scope = scope.rpartition(".")[0]
+            if n in mod.functions:
+                return {f"{mod.name}:{n}"}
+            if n in mod.from_imports:
+                src, orig = mod.from_imports[n]
+                key = self._project_key(src, orig)
+                return {key} if key else set()
+            return set()
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+            tgt = self._root_module(mod, expr.value.id)
+            if tgt is not None:
+                key = self._project_key(tgt, expr.attr)
+                return {key} if key else set()
+            return set()
+        if isinstance(expr, ast.Call):
+            fn = expr.func
+            is_partial = (
+                (isinstance(fn, ast.Name) and fn.id == "partial")
+                or (isinstance(fn, ast.Attribute) and fn.attr == "partial"))
+            if is_partial and expr.args:
+                return self.resolve_callable(mod, qual, expr.args[0], bindings)
+        return set()
+
+
+def _local_bindings(index: _Index, mod: _Module, qual: str,
+                    fn: ast.FunctionDef) -> dict:
+    """name -> set of project-function keys it may be bound to (union over
+    reassignments, so ``tick_fn = core.cc_tick`` / ``tick_fn = ops.mltcp_cc_tick``
+    yields both)."""
+    bindings: dict = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        keys = index.resolve_callable(mod, qual, node.value, bindings)
+        if not keys:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                bindings.setdefault(tgt.id, set()).update(keys)
+    return bindings
+
+
+def _loop_roots(index: _Index, mod: _Module) -> set:
+    """Project-function keys used as loop bodies anywhere in this module."""
+    roots: set = set()
+    scopes = [("", mod.tree)] + list(mod.functions.items())
+    for qual, scope in scopes:
+        bindings = (_local_bindings(index, mod, qual, scope)
+                    if isinstance(scope, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) else {})
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = None
+            if isinstance(node.func, ast.Attribute):
+                root = node.func
+                while isinstance(root, ast.Attribute):
+                    base, root = root, root.value
+                if (isinstance(root, ast.Name)
+                        and (index.is_jaxish(mod, root.id)
+                             or root.id in ("jax", "lax"))):
+                    fname = node.func.attr
+            elif isinstance(node.func, ast.Name):
+                src = mod.from_imports.get(node.func.id, ("", ""))[0]
+                if src.startswith("jax"):
+                    fname = mod.from_imports[node.func.id][1]
+            if fname not in _LOOP_BODY_ARGS:
+                continue
+            arg_ix = _LOOP_BODY_ARGS[fname]
+            if arg_ix is None:                       # switch: branches 1..N
+                arg_ix = tuple(range(1, len(node.args)))
+            for i in arg_ix:
+                if i < len(node.args):
+                    roots |= index.resolve_callable(mod, qual, node.args[i],
+                                                    bindings)
+    return roots
+
+
+def _call_edges(index: _Index, mod: _Module, qual: str,
+                fn: ast.FunctionDef) -> set:
+    bindings = _local_bindings(index, mod, qual, fn)
+    edges: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            edges |= index.resolve_callable(mod, qual, node.func, bindings)
+    # bound callables count as edges even when only called indirectly
+    for keys in bindings.values():
+        edges |= keys
+    return edges
+
+
+def _allowed(mod: _Module, lineno: int, rule: str) -> bool:
+    if 1 <= lineno <= len(mod.lines):
+        m = _PRAGMA.search(mod.lines[lineno - 1])
+        if m:
+            allowed = {r.strip() for r in m.group(1).split(",")}
+            short = rule.split("/", 1)[-1]
+            return rule in allowed or short in allowed
+    return False
+
+
+def _where(mod: _Module, node) -> str:
+    return f"{mod.filename}:{node.lineno}"
+
+
+# ---------------------------------------------------------------------------
+# per-function rule passes
+# ---------------------------------------------------------------------------
+
+def _traced_names(index: _Index, mod: _Module, fn: ast.FunctionDef) -> set:
+    """Names inferred to hold traced values: assigned (transitively) from a
+    jnp/jax/lax call.  Parameters are *not* auto-traced — the engine's
+    static-config branches (``if cfg.use_pallas_kernel``) must stay legal."""
+    traced: set = set()
+
+    def mentions_traced(expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in traced:
+                return True
+            if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)):
+                root = n.func
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if (isinstance(root, ast.Name)
+                        and index.is_jaxish(mod, root.id)):
+                    return True
+        return False
+
+    def bind(tgt):
+        # only plain name targets (and tuple/list unpacks of them) become
+        # traced; subscript/attribute targets would leak index names
+        if isinstance(tgt, ast.Name):
+            traced.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                bind(el)
+
+    # two passes over statements in textual order picks up simple forward
+    # chains without a full fixpoint
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and mentions_traced(node.value):
+                for tgt in node.targets:
+                    bind(tgt)
+            elif isinstance(node, ast.AugAssign) and mentions_traced(node.value):
+                bind(node.target)
+    return traced
+
+
+# attributes of traced arrays that are static python values — branching on
+# them is fine
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "_fields"})
+
+
+def _dynamic_names(expr) -> set:
+    """Names in `expr` whose *values* flow into it — skipping `is`/`is not`
+    comparisons (None-ness is static) and static array attributes."""
+    out: set = set()
+
+    def rec(n):
+        if (isinstance(n, ast.Compare)
+                and all(isinstance(o, (ast.Is, ast.IsNot)) for o in n.ops)):
+            return
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        for c in ast.iter_child_nodes(n):
+            rec(c)
+
+    rec(expr)
+    return out
+
+
+def _lint_function(index: _Index, mod: _Module, qual: str,
+                   fn: ast.FunctionDef, reachable: bool,
+                   findings: list) -> None:
+    traced = _traced_names(index, mod, fn)
+
+    def emit(rule, node, msg):
+        if not _allowed(mod, node.lineno, rule):
+            findings.append(make_finding(rule, _where(mod, node), msg))
+
+    def np_root(expr) -> bool:
+        root = expr
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        return (isinstance(root, ast.Name)
+                and (index.is_numpy(mod, root.id) or root.id == "np"))
+
+    own_defs = {n for n in ast.walk(fn)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and n is not fn}
+    skip = set()
+    for d in own_defs:       # nested defs are linted as their own qualnames
+        skip.update(ast.walk(d))
+
+    for node in ast.walk(fn):
+        if node in skip:
+            continue
+        if isinstance(node, ast.Call):
+            f = node.func
+            if reachable and isinstance(f, ast.Attribute) and np_root(f):
+                emit("src/np-in-scan", node,
+                     f"`{ast.unparse(f)}` call in scan-reachable "
+                     f"`{mod.name}:{qual}` (np.* does not trace; whitelist "
+                     f"trace-time constants with `# lint: allow(np-in-scan)`)")
+            if (reachable and isinstance(f, ast.Name)
+                    and f.id in ("float", "int", "bool")
+                    and len(node.args) == 1):
+                arg = node.args[0]
+                if _dynamic_names(arg) & traced:
+                    emit("src/float-cast-traced", node,
+                         f"`{f.id}({ast.unparse(arg)})` concretizes a "
+                         f"traced value in `{mod.name}:{qual}`")
+        elif isinstance(node, ast.If):
+            if reachable and _dynamic_names(node.test) & traced:
+                emit("src/branch-on-traced", node,
+                     f"python `if {ast.unparse(node.test)}` on a traced "
+                     f"value in `{mod.name}:{qual}`; use jnp.where/lax.cond")
+        elif isinstance(node, ast.Attribute) and node.attr == "float64":
+            if np_root(node):
+                if reachable:
+                    emit("src/f64-literal", node,
+                         f"np.float64 in scan-reachable `{mod.name}:{qual}` "
+                         f"(numpy-side plumbing only)")
+            else:
+                root = node.value
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if (isinstance(root, ast.Name)
+                        and index.is_jaxish(mod, root.id)):
+                    emit("src/f64-literal", node,
+                         f"jnp/jax float64 in `{mod.name}:{qual}` — the "
+                         f"pipeline is pinned f32")
+        elif (reachable and isinstance(node, ast.Constant)
+                and node.value == "float64"):
+            emit("src/f64-literal", node,
+                 f'"float64" dtype string in scan-reachable '
+                 f"`{mod.name}:{qual}`")
+
+
+def _operand_unit(expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return _unit_of(expr.id)
+    if isinstance(expr, ast.Attribute):
+        return _unit_of(expr.attr)
+    return None
+
+
+def _lint_units(mod: _Module, findings: list) -> None:
+    for node in ast.walk(mod.tree):
+        pairs = []
+        if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                      (ast.Add, ast.Sub)):
+            pairs = [(node.left, node.right)]
+        elif isinstance(node, ast.Compare):
+            operands = [node.left] + list(node.comparators)
+            pairs = list(zip(operands, operands[1:]))
+        for a, b in pairs:
+            ua, ub = _operand_unit(a), _operand_unit(b)
+            if ua and ub and ua != ub:
+                if not _allowed(mod, node.lineno, "src/unit-suffix"):
+                    findings.append(make_finding(
+                        "src/unit-suffix", _where(mod, node),
+                        f"`{ast.unparse(a)}` [{ua}] "
+                        f"{'+/-' if isinstance(node, ast.BinOp) else 'vs'} "
+                        f"`{ast.unparse(b)}` [{ub}] mixes units"))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _lint_modules(modules: list[_Module]) -> tuple[list[Finding], dict]:
+    index = _Index(modules)
+    roots: set = set()
+    for m in modules:
+        roots |= _loop_roots(index, m)
+
+    # BFS the call graph from the loop roots
+    reachable = set(roots)
+    frontier = list(roots)
+    while frontier:
+        key = frontier.pop()
+        node = index.table.get(key)
+        if node is None:
+            continue
+        modname, qual = key.split(":", 1)
+        for callee in _call_edges(index, index.modules[modname], qual, node):
+            if callee not in reachable:
+                reachable.add(callee)
+                frontier.append(callee)
+
+    findings: list[Finding] = []
+    for m in modules:
+        for qual, fn in m.functions.items():
+            _lint_function(index, m, qual, fn,
+                           reachable=f"{m.name}:{qual}" in reachable,
+                           findings=findings)
+        _lint_units(m, findings)
+
+    facts = {"modules": len(modules),
+             "functions": len(index.table),
+             "loop_roots": len(roots),
+             "scan_reachable": len(reachable)}
+    return findings, facts
+
+
+def lint_sources(sources: dict) -> tuple[list[Finding], dict]:
+    """Lint in-memory sources: {filename: text}.  Module names derive from
+    the filenames (`a/b.py` -> `a.b`), so fixtures can fake cross-module
+    imports.  This is the test surface."""
+    modules = [_collect_module(_module_name(Path(fname)), fname, text)
+               for fname, text in sorted(sources.items())]
+    return _lint_modules(modules)
+
+
+def lint_paths(paths=None) -> tuple[list[Finding], dict]:
+    """Lint the repo sources (default: core, netsim, kernels packages)."""
+    if paths is None:
+        src_root = Path(__file__).resolve().parents[2]
+        paths = [src_root / d for d in DEFAULT_SCAN_DIRS]
+    files: list[Path] = []
+    for p in map(Path, paths):
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    modules = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(Path.cwd())
+        except ValueError:
+            rel = f
+        modules.append(_collect_module(_module_name(f), str(rel),
+                                       f.read_text()))
+    return _lint_modules(modules)

@@ -1,0 +1,82 @@
+"""One accessor over the runtime health counters.
+
+Two process-global counters guard the repo's fusion story: the engine bumps
+``engine.TRACE_COUNT`` once per (re)trace of the sweep program, and the
+kernel wrapper bumps ``ops.FALLBACK_COUNT`` once per trace that routed the
+CC tick through the jnp oracle instead of the fused Pallas kernel.  Before
+this module every consumer re-implemented the same fragile pokes —
+``getattr(sys.modules.get("repro.kernels.ops"), "FALLBACK_COUNT", 0)`` in
+`experiment.py`, in ci.yml heredocs, in benchmark suites.  Now there is one
+surface:
+
+    from repro.netsim import counters
+
+    with counters.watch() as w:
+        run_plan(plan)
+    assert w.traces == 2 and w.fallbacks == 0
+
+``watch()`` snapshots both counters at entry; the returned handle's
+``.traces`` / ``.fallbacks`` are live deltas (they keep counting after the
+``with`` block exits, so reading them post-exit sees everything the block
+did).  Reading never imports ``repro.kernels`` — a plan that never enables
+``use_pallas_kernel`` shouldn't pay the kernel import.
+"""
+from __future__ import annotations
+
+import contextlib
+import sys
+
+__all__ = ["traces", "fallbacks", "reset_fallback_warnings",
+           "watch", "CounterWatch"]
+
+
+def traces() -> int:
+    """Current engine.TRACE_COUNT (sweep-program traces this process)."""
+    from repro.netsim import engine
+
+    return engine.TRACE_COUNT
+
+
+def fallbacks() -> int:
+    """Current ops.FALLBACK_COUNT without importing the kernels package
+    (0 when repro.kernels.ops was never imported — nothing can have fallen
+    back if the wrapper never loaded)."""
+    mod = sys.modules.get("repro.kernels.ops")
+    return getattr(mod, "FALLBACK_COUNT", 0) if mod is not None else 0
+
+
+def reset_fallback_warnings() -> None:
+    """Re-arm ops.py's once-per-reason fallback warning (no-op when the
+    kernels were never imported).  `run_plan` calls this per plan so each
+    plan warns at most once per fallback reason."""
+    mod = sys.modules.get("repro.kernels.ops")
+    if mod is not None:
+        mod.reset_fallback_warnings()
+
+
+class CounterWatch:
+    """Live deltas of both counters since construction."""
+
+    def __init__(self) -> None:
+        self._traces0 = traces()
+        self._fallbacks0 = fallbacks()
+
+    @property
+    def traces(self) -> int:
+        return traces() - self._traces0
+
+    @property
+    def fallbacks(self) -> int:
+        return fallbacks() - self._fallbacks0
+
+
+@contextlib.contextmanager
+def watch(*, reset_warnings: bool = False):
+    """Context manager yielding a `CounterWatch` over the enclosed work.
+
+    ``reset_warnings=True`` additionally re-arms the once-per-reason kernel
+    fallback warning at entry (the per-plan semantics `run_plan` wants).
+    """
+    if reset_warnings:
+        reset_fallback_warnings()
+    yield CounterWatch()

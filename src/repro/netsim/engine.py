@@ -945,6 +945,20 @@ def lower_sweep(cfg: SimConfig, sweep: SweepParams):
     return _run_sweep.lower(cfg, sweep)
 
 
+def trace_sweep(cfg: SimConfig, sweep: SweepParams):
+    """Trace the sweep program (`jax.stages.Traced`) without lowering it.
+
+    The static analyzer's entry point (repro.analysis.jaxpr_lint): the
+    returned object's ``.jaxpr`` is the exact program `simulate_sweep`
+    would run for this (cfg, sweep shape) — same jit entry, same jaxpr
+    cache, one `TRACE_COUNT` bump for a cold config and zero for a warm
+    one — so IR-level invariants (kernel presence, no f64, no callbacks)
+    are proved about the real program, not a re-traced imitation.
+    """
+    _validate_sweep(cfg, sweep)
+    return _run_sweep.trace(cfg, sweep)
+
+
 def simulate(cfg: SimConfig) -> RawSimOutput:
     """Run one simulation (a K=1 `simulate_sweep`, kept for compatibility).
 

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import os
 import pickle
 import time
@@ -62,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.netsim import counters
 from repro.netsim import engine as engine_mod
 from repro.netsim import metrics
 from repro.netsim.engine import (
@@ -76,7 +78,8 @@ from repro.netsim.telemetry import TelemetrySpec
 from repro.netsim.topology import Topology
 
 __all__ = ["Axis", "Plan", "PlanResult", "GroupProfile", "PlanProfile",
-           "run_plan", "prune_cache", "restrict_workload"]
+           "run_plan", "prune_cache", "restrict_workload",
+           "resolve_plan", "group_sweep"]
 
 _DYNAMIC_FIELDS = frozenset(SweepParams._fields)
 
@@ -618,16 +621,57 @@ class PlanResult:
 # On-disk point cache (resumable benchmark runs)
 # ---------------------------------------------------------------------------
 
+# Array dtype kinds the cache key encodes bit-for-bit.  Everything else —
+# object arrays most importantly — is rejected loudly: ``tobytes()`` on an
+# object array serializes *pointers*, which are unique per process, so a
+# silently-coerced leaf would make every run a cache miss (or worse, a
+# collision if the allocator reuses addresses).
+_HASHABLE_KINDS = frozenset("biufcSU")  # bool/int/uint/float/complex/bytes/str
+
+
+def _canonical_float_array(a: np.ndarray) -> np.ndarray:
+    """Float arrays with every NaN rewritten to the canonical quiet NaN.
+
+    IEEE NaNs carry payload/sign bits that `tobytes` would leak into the
+    key: two logically-identical configs built via different code paths
+    (e.g. 0/0 vs float("nan")) could hash apart and silently re-simulate.
+    Distinct *positions* of NaN still produce distinct keys — only the
+    bit-pattern within each NaN is normalized.
+    """
+    if a.dtype.kind not in "fc" or not np.isnan(a).any():
+        return a
+    a = a.copy()
+    a[np.isnan(a)] = np.nan
+    return a
+
+
 def _stable_bytes(obj, out: list) -> None:
     """Deterministic byte serialization for cache keys (hash() is salted
-    per process, so HashableConfig hashes cannot key an on-disk cache)."""
+    per process, so HashableConfig hashes cannot key an on-disk cache).
+
+    Non-finite floats are encoded explicitly (every NaN bit-pattern maps to
+    one token; +/-inf keep their signs) and array leaves must be of a
+    plainly-hashable dtype — anything that numpy would coerce to an object
+    array raises instead of producing a pointer-dependent key.
+    """
     if obj is None or isinstance(obj, (bool, int, str)):
         out.append(repr(obj).encode())
     elif isinstance(obj, float):
-        out.append(np.float64(obj).tobytes())
+        if math.isnan(obj):
+            out.append(b"f:nan")
+        elif math.isinf(obj):
+            out.append(b"f:+inf" if obj > 0 else b"f:-inf")
+        else:
+            out.append(np.float64(obj).tobytes())
     elif isinstance(obj, np.ndarray):
+        if obj.dtype.kind not in _HASHABLE_KINDS:
+            raise TypeError(
+                f"cache key leaf is a {obj.dtype} array; only "
+                f"bool/int/float/complex/str arrays have a stable byte "
+                f"encoding (object arrays would hash their pointers)")
         out.append(f"nd{obj.dtype}{obj.shape}".encode())
-        out.append(np.ascontiguousarray(obj).tobytes())
+        out.append(np.ascontiguousarray(_canonical_float_array(obj))
+                   .tobytes())
     elif isinstance(obj, (list, tuple)):
         out.append(f"seq{len(obj)}".encode())
         for v in obj:
@@ -643,7 +687,12 @@ def _stable_bytes(obj, out: list) -> None:
             _stable_bytes(f.name, out)
             _stable_bytes(getattr(obj, f.name), out)
     else:
-        _stable_bytes(np.asarray(obj), out)
+        arr = np.asarray(obj)
+        if arr.dtype.kind not in _HASHABLE_KINDS:
+            raise TypeError(
+                f"cache key leaf of type {type(obj).__name__} has no "
+                f"stable byte encoding (coerces to a {arr.dtype} array)")
+        _stable_bytes(arr, out)
 
 
 # Result-schema version: bump whenever the pickled `SimResult` payload
@@ -725,44 +774,74 @@ def _cache_save(cache_dir: str, key: str, res: metrics.SimResult) -> None:
 # The runner
 # ---------------------------------------------------------------------------
 
-def _kernel_fallback_count() -> int:
-    """Current repro.kernels.ops.FALLBACK_COUNT without importing kernels
-    (plans that never enable use_pallas_kernel shouldn't pay the import)."""
-    import sys
+def _resolve_overrides(plan: Plan, points: list[dict]) -> list[dict]:
+    """Each point's resolved dynamic-axis overrides ({sweep field: value})."""
+    dyn_axes = [ax for ax in plan.axes if ax.is_dynamic()]
+    for ax in dyn_axes:
+        if ax.target not in _DYNAMIC_FIELDS:
+            raise ValueError(f"axis {ax.name!r} is dynamic but targets "
+                             f"unknown sweep field {ax.target!r}")
+    overrides = []
+    for pt in points:
+        ov = {}
+        for ax in dyn_axes:
+            v = pt[ax.name]
+            ov[ax.target] = ax.resolve(v) if ax.resolve is not None else v
+        overrides.append(ov)
+    return overrides
 
-    mod = sys.modules.get("repro.kernels.ops")
-    return getattr(mod, "FALLBACK_COUNT", 0) if mod is not None else 0
+
+def resolve_plan(plan: Plan, *, pad_jobs: bool = True,
+                 telemetry: Optional[TelemetrySpec] = None
+                 ) -> tuple[list[dict], list[SimConfig], list[dict],
+                            list[_Group]]:
+    """The static partitioning stage of `run_plan`, without executing.
+
+    Returns ``(points, cfgs, overrides, groups)``: the plan's label dicts,
+    each point's built config (telemetry stamped on if given), its resolved
+    dynamic overrides, and the predicted compile groups (each group's
+    ``idxs`` index into ``points``/``cfgs``).  This is exactly the grouping
+    a cache-less `run_plan` would execute — the static analyzer
+    (`repro.analysis`) lints these groups' lowerings before anything runs,
+    and benchmark health checks compare the prediction against what a run
+    actually compiled.
+    """
+    points = plan.points()
+    cfgs = [plan.build(dict(pt)) for pt in points]
+    if telemetry is not None:
+        cfgs = [dataclasses.replace(c, telemetry=telemetry) for c in cfgs]
+    overrides = _resolve_overrides(plan, points)
+    groups = _compile_groups(cfgs, pad_jobs)
+    return points, cfgs, overrides, groups
 
 
-def _reset_fallback_warnings() -> None:
-    """Re-arm ops.py's once-per-reason fallback warning for this plan (the
-    guard is process-global, so without this a plan that newly falls back
-    after an earlier one would bump FALLBACK_COUNT silently)."""
-    import sys
-
-    mod = sys.modules.get("repro.kernels.ops")
-    if mod is not None:
-        mod.reset_fallback_warnings()
+def group_sweep(cfgs: list[SimConfig], overrides: list[dict],
+                group: _Group) -> SweepParams:
+    """One compile group's batched SweepParams, exactly as `run_plan` would
+    stack it (point params resolved on the group fabric, K = len(idxs))."""
+    per_point = [_point_params(cfgs[i], overrides[i], group)
+                 for i in group.idxs]
+    return _stack_params(per_point)
 
 
 def _run_group_profiled(cfg: SimConfig, sweep: SweepParams,
                         prof: GroupProfile):
     """AOT-lowered group execution with a trace/compile/execute wall-time
     split and the compiled program's device-memory footprint."""
-    traces_before = engine_mod.TRACE_COUNT
-    t0 = time.perf_counter()
-    lowered = engine_mod.lower_sweep(cfg, sweep)
-    t1 = time.perf_counter()
-    compiled = lowered.compile()
-    t2 = time.perf_counter()
-    raw = compiled(sweep)
-    jax.block_until_ready(raw)
-    t3 = time.perf_counter()
+    with counters.watch() as w:
+        t0 = time.perf_counter()
+        lowered = engine_mod.lower_sweep(cfg, sweep)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        raw = compiled(sweep)
+        jax.block_until_ready(raw)
+        t3 = time.perf_counter()
     prof.trace_s = t1 - t0
     prof.compile_s = t2 - t1
     prof.execute_s = t3 - t2
     prof.wall_s = t3 - t0
-    prof.traced = engine_mod.TRACE_COUNT > traces_before
+    prof.traced = w.traces > 0
     try:
         mem = compiled.memory_analysis()
         prof.device_bytes = int(mem.temp_size_in_bytes
@@ -806,19 +885,7 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
     cfgs = [plan.build(dict(pt)) for pt in points]
     if telemetry is not None:
         cfgs = [dataclasses.replace(c, telemetry=telemetry) for c in cfgs]
-    _reset_fallback_warnings()
-    dyn_axes = [ax for ax in plan.axes if ax.is_dynamic()]
-    for ax in dyn_axes:
-        if ax.target not in _DYNAMIC_FIELDS:
-            raise ValueError(f"axis {ax.name!r} is dynamic but targets "
-                             f"unknown sweep field {ax.target!r}")
-    overrides = []
-    for pt in points:
-        ov = {}
-        for ax in dyn_axes:
-            v = pt[ax.name]
-            ov[ax.target] = ax.resolve(v) if ax.resolve is not None else v
-        overrides.append(ov)
+    overrides = _resolve_overrides(plan, points)
 
     results: list[Optional[metrics.SimResult]] = [None] * len(points)
     keys: list[Optional[str]] = [None] * len(points)
@@ -831,40 +898,40 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
     todo = [i for i in range(len(points)) if results[i] is None]
 
     groups = _compile_groups([cfgs[i] for i in todo], pad_jobs)
-    fallbacks_before = _kernel_fallback_count()
     plan_profile = PlanProfile()
-    for group in groups:
-        idxs = [todo[j] for j in group.idxs]   # group indexes the todo subset
-        per_point = [_point_params(cfgs[i], overrides[i], group)
-                     for i in idxs]
-        sweep = _stack_params(per_point)
-        k = len(idxs)
-        sweep, _ = _shard_sweep(sweep, k, shard)
-        prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
-                            n_flows=group.cfg.topo.n_flows,
-                            n_ticks=group.cfg.n_ticks,
-                            wall_s=0.0, traced=False)
-        if profile:
-            raw = _run_group_profiled(group.cfg, sweep, prof)
-        else:
-            traces_before = engine_mod.TRACE_COUNT
-            t0 = time.perf_counter()
-            raw = simulate_sweep(group.cfg, sweep)
-            jax.block_until_ready(raw)
-            prof.wall_s = time.perf_counter() - t0
-            prof.traced = engine_mod.TRACE_COUNT > traces_before
-        plan_profile.groups.append(prof)
-        for slot, i in enumerate(idxs):
-            point = SweepPoint(axes=dict(points[i]), params=per_point[slot],
-                               n_jobs=cfgs[i].jobs.n_jobs)
-            raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s], raw)
-            results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
-                                             n_jobs=point.n_jobs)
-            if cache_dir is not None:
-                _cache_save(cache_dir, keys[i], results[i])
+    with counters.watch(reset_warnings=True) as plan_watch:
+        for group in groups:
+            idxs = [todo[j] for j in group.idxs]  # group indexes todo subset
+            per_point = [_point_params(cfgs[i], overrides[i], group)
+                         for i in idxs]
+            sweep = _stack_params(per_point)
+            k = len(idxs)
+            sweep, _ = _shard_sweep(sweep, k, shard)
+            prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
+                                n_flows=group.cfg.topo.n_flows,
+                                n_ticks=group.cfg.n_ticks,
+                                wall_s=0.0, traced=False)
+            if profile:
+                raw = _run_group_profiled(group.cfg, sweep, prof)
+            else:
+                with counters.watch() as w:
+                    t0 = time.perf_counter()
+                    raw = simulate_sweep(group.cfg, sweep)
+                    jax.block_until_ready(raw)
+                    prof.wall_s = time.perf_counter() - t0
+                prof.traced = w.traces > 0
+            plan_profile.groups.append(prof)
+            for slot, i in enumerate(idxs):
+                point = SweepPoint(axes=dict(points[i]),
+                                   params=per_point[slot],
+                                   n_jobs=cfgs[i].jobs.n_jobs)
+                raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s], raw)
+                results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
+                                                 n_jobs=point.n_jobs)
+                if cache_dir is not None:
+                    _cache_save(cache_dir, keys[i], results[i])
     return PlanResult(plan=plan, results=results,
                       n_compile_groups=len(groups),
-                      n_kernel_fallbacks=(_kernel_fallback_count()
-                                          - fallbacks_before),
+                      n_kernel_fallbacks=plan_watch.fallbacks,
                       n_cache_hits=n_cache_hits,
                       profile=plan_profile)

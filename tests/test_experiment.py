@@ -306,3 +306,50 @@ def test_shard_auto_is_safe_on_any_device_count():
         np.testing.assert_allclose(np.concatenate(a.iter_times + [[0.0]]),
                                    np.concatenate(b.iter_times + [[0.0]]),
                                    rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key hashing of non-finite / non-hashable leaves
+# ---------------------------------------------------------------------------
+
+def test_cache_key_nan_axes_do_not_collide():
+    """NaN-bearing override arrays must key by NaN *position*, not collapse
+    to one entry (the would-be cache aliasing bug) — and identical content
+    must still key identically."""
+    cfg = _cfg()
+    a = np.array([np.nan, 1.0, 2.0])
+    b = np.array([1.0, np.nan, 2.0])
+    k_a = experiment._point_cache_key(cfg, {"x": a})
+    k_b = experiment._point_cache_key(cfg, {"x": b})
+    assert k_a != k_b
+    assert k_a == experiment._point_cache_key(cfg, {"x": a.copy()})
+
+
+def test_cache_key_nan_bit_patterns_canonicalize():
+    """Two logically-identical configs whose NaNs carry different IEEE
+    payload bits (0/0 vs float('nan') vs payload-poked) must share a key."""
+    cfg = _cfg()
+    a = np.array([np.nan, 3.0])
+    b = a.copy()
+    b.view(np.uint64)[0] |= 0xDEAD          # poke payload bits, still NaN
+    assert np.isnan(b[0]) and a.tobytes() != b.tobytes()
+    assert (experiment._point_cache_key(cfg, {"x": a})
+            == experiment._point_cache_key(cfg, {"x": b}))
+    # python-float NaN leaves canonicalize the same way
+    assert (experiment._point_cache_key(cfg, {"x": float("nan")})
+            == experiment._point_cache_key(cfg, {"x": np.float64("nan")}))
+
+
+def test_cache_key_inf_signs_distinct():
+    cfg = _cfg()
+    assert (experiment._point_cache_key(cfg, {"x": float("inf")})
+            != experiment._point_cache_key(cfg, {"x": float("-inf")}))
+
+
+def test_cache_key_rejects_object_leaves():
+    """Object arrays hash their element pointers — nondeterministic across
+    processes — so they must raise instead of producing a silent bad key."""
+    cfg = _cfg()
+    with pytest.raises(TypeError, match="object"):
+        experiment._point_cache_key(
+            cfg, {"x": np.array([object(), object()], dtype=object)})
