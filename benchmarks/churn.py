@@ -1,0 +1,310 @@
+"""Fault-injection gauntlet — re-convergence under churn, flaps, blackholes.
+
+The paper's robustness claim (§1, §5.4) is that MLTCP interleaves
+"regardless of the number of competing flows or the start time of each
+flow" — a statement about *re*-convergence, not just cold starts.  This
+suite runs a 3-job contended dumbbell through a scripted fault gauntlet
+(arrival -> first-hop blackhole -> departure -> re-arrival -> bottleneck
+flap) and measures, per fault-event window, how many training iterations
+MLTCP needs to re-interleave (`netsim.telemetry`'s "reinterleave"
+detector, DESIGN.md §8) — for MLTCP-Reno / MLTCP-CUBIC / MLQCN against
+their unmodified baselines, on the fused Pallas CC-tick kernel path.
+
+The suite asserts the robustness shape: after every fault boundary MLTCP
+re-stabilizes within ``MAX_REINTERLEAVE_ITERS`` training iterations (the
+window while a socket blackhole is *actively* null-routing is reported
+but exempt — interleaving is ill-defined while flows are unplugged) and
+holds interleave stability >=0.95 across the whole gauntlet; the
+baselines never shake off their synchronized episodes (at least one
+fault window never re-converges, and baseline stability sits strictly
+below MLTCP's on the identical gauntlet).
+Fault *schedules* are `SweepParams`
+leaves via an ``Axis(field="*")``, so the whole schedule grid batches
+into one compile group per (algo, variant) — arming faults costs zero
+extra traces beyond the armed program itself.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro import netsim
+
+# the paper's "within a few training iterations" bound, held per fault event
+MAX_REINTERLEAVE_ITERS = 10.0
+
+# §4.1 socket counts (multi-socket TCP, single-QP RoCE) — as in timeline.py
+SOCKETS = {"reno": 2, "cubic": 2, "dcqcn": 1}
+
+N_JOBS = 3
+
+# The gauntlet runs on the *iteration* clock, not the suite's wall-clock
+# budget: event times are fractions of the run, and the per-event bound
+# ("re-interleaves within 10 training iterations") only means the same
+# thing at every scale if each fault window spans the same number of
+# iterations.  Iteration duration scales with common.WORK_SCALE, so the
+# run does too — 4.5 s at the 0.25x smoke/quick workload (each window
+# spans ~4-8 iterations, comfortably above the 10-iter assertion's
+# resolution and validated empirically), 18 s at full.  Tying it to
+# common.SIM_TIME instead stretches every window ~3x in iterations at
+# quick scale, and the interleaved band's rare brush-ups past the
+# overlap threshold then land *late inside* the longer windows,
+# inflating the measured re-interleave time without any change in the
+# underlying dynamics.
+SIM_TIME = 18.0 * common.WORK_SCALE
+
+# Double the dumbbell bottleneck: the 3-job episode must be *feasible*
+# (three gpt2 comm phases cannot slot into the 2-job 50 Gbps capacity;
+# at 100 Gbps the sum duty is ~0.75 and MLTCP interleaves all three) and
+# every post-event window needs slack to re-lock in bounded iterations —
+# at exact saturation a perturbed two-body state re-sorts only on its own
+# slow beat timescale.  The degraded-optic flap (0.5x -> 50 Gbps) is the
+# saturated-contention window where the baselines' synchronization is
+# starkest.
+CAP_GBPS = 100.0
+
+# Event-table structure shared by every schedule label: 8 boundary rows
+# (t=0 baseline, arrival, blackhole open/close, departure, re-arrival,
+# flap open/close).  One spec => one compile group per (algo, variant)
+# across all schedules.
+SPEC = netsim.FaultSpec(n_events=8, churn=True, link_flaps=True,
+                        blackholes=True)
+
+SCHEDULES = ("gauntlet", "staggered")
+
+
+def _job_flows(cfg: netsim.SimConfig, job: int) -> list[int]:
+    return [int(f) for f in
+            np.nonzero(np.asarray(cfg.topo.flow_to_job) == job)[0]]
+
+
+def _events(cfg: netsim.SimConfig, label: str) -> list:
+    """The labeled gauntlet on ``cfg``'s fabric, timed as fractions of the
+    run so smoke and full scale exercise the same shape.
+
+    The churned job is *absent at t=0* (a departure folded into row 0), so
+    the steady fabric is 2 resident jobs, and the gauntlet runs a full
+    churn cycle: the third job arrives, one resident socket is
+    blackholed, the churned job departs mid-run, *re-arrives*, and a
+    degraded-optic capacity flap (0.88-0.9x) hits the second 3-job
+    episode.  Two structural rules, learned the hard way: (1) every
+    perturbation lands while the fabric is *contended* (sum duty ~0.75+)
+    — re-convergence needs a congestion gradient to sort against, and a
+    scramble injected into a slack fabric leaves the flows phase-locked
+    with no restoring force; (2) every asserted window is *bounded* by
+    the next event (the run ends inside the contended 3-job regime, the
+    only one whose restoring force also corrects slow phase drift over a
+    long unbounded tail)."""
+    T = cfg.sim_time
+    if label == "gauntlet":
+        churn_job, bh_job = 2, 0
+        arr, dep, rearr = 0.08 * T, 0.30 * T, 0.38 * T
+        bh = (0.18 * T, 0.22 * T)
+        flap = (0.50 * T, 0.64 * T, 0.88)
+    elif label == "staggered":
+        churn_job, bh_job = 1, 2
+        arr, dep, rearr = 0.10 * T, 0.32 * T, 0.40 * T
+        bh = (0.20 * T, 0.24 * T)
+        flap = (0.52 * T, 0.66 * T, 0.9)
+    else:
+        raise ValueError(f"unknown schedule label {label!r}")
+    return [
+        netsim.job_departs(0.0, churn_job),
+        netsim.job_arrives(arr, churn_job),
+        netsim.job_departs(dep, churn_job),
+        netsim.job_arrives(rearr, churn_job),
+        netsim.link_flap(flap[0], flap[1], 0, flap[2]),
+        # null-route ONE socket of a resident job while the 3-job episode
+        # is live: the loss-signal + retransmit path under test, with the
+        # headroom to re-lock (a whole-job hole at a *saturated* link
+        # leaves a metastable two-body state that re-sorts only on its own
+        # slow beat timescale)
+        netsim.blackhole(bh[0], bh[1], _job_flows(cfg, bh_job)[:1]),
+    ]
+
+
+def _window_names(cfg: netsim.SimConfig, label: str) -> dict[int, str]:
+    """start tick -> semantic window name, for per-event-type asserts."""
+    _, arr, dep, rearr, flap, bh = _events(cfg, label)
+    to_tick = lambda t: max(0, int(round(t / cfg.dt)))
+    return {
+        0: "cold-start",
+        to_tick(arr.t): "arrival",
+        to_tick(dep.t): "departure",
+        to_tick(rearr.t): "re-arrival",
+        to_tick(flap.t): "flap",
+        to_tick(flap.t_end): "flap-clear",
+        to_tick(bh.t): "blackhole-active",
+        to_tick(bh.t_end): "blackhole-clear",
+    }
+
+
+def make_schedule(cfg: netsim.SimConfig, label: str) -> netsim.FaultSchedule:
+    return netsim.fault_schedule(cfg, _events(cfg, label), spec=SPEC)
+
+
+def telemetry_spec() -> netsim.TelemetrySpec:
+    """Arm the overlap machinery plus the per-event re-interleave detector
+    (opt-in; needs ``cfg.faults``).  Same ~1000-sample decimation policy as
+    the timeline suite."""
+    n_ticks = int(round(SIM_TIME / common.DT))
+    return netsim.TelemetrySpec(
+        probes=("interleave_overlap", "job_iter"),
+        detectors=("interleave", "iter_sketch", "reinterleave"),
+        # the 3-way interleaved band oscillates at 0.2-0.55 pairwise
+        # overlap with transient brush-ups to ~0.75; synchronized
+        # baselines sit near 1.0 persistently — 0.8 sits *between* the
+        # two regimes, so a brush-up isn't scored as lost convergence
+        # while a synchronized baseline still never clears
+        overlap_threshold=0.8,
+        stride=max(1, n_ticks // 1000))
+
+
+def make_plan(algos=("reno", "cubic", "dcqcn")) -> netsim.Plan:
+    """algo x {OFF, WI} x schedule x seed.  The schedule axis targets
+    ``field="*"``: each label resolves (per point config — blackhole tables
+    are [E, n_flows] and n_flows tracks the socket count) to the full
+    `FaultSchedule.overrides()` dict, so schedules ride the batched sweep
+    and the grid stays at one compile group per (algo, variant)."""
+    profs = common.gpt2(N_JOBS)
+
+    def build(pt):
+        topo = netsim.dumbbell(N_JOBS, sockets_per_job=SOCKETS[pt["algo"]],
+                               cap_gbps=CAP_GBPS)
+        return common.build_cfg(
+            topo, profs, common.protocol(pt["algo"], pt["variant"]),
+            sim_time=SIM_TIME,
+            faults=SPEC, telemetry=telemetry_spec(),
+            use_pallas_kernel=True)
+
+    return common.plan(
+        build, name="churn-gauntlet",
+        algo=tuple(algos), variant=("OFF", "WI"),
+        schedule=netsim.Axis(
+            "schedule", SCHEDULES, field="*",
+            resolve=lambda label: (
+                lambda cfg: make_schedule(cfg, label).overrides())),
+        seed=common.seed_axis())
+
+
+def _event_rows(res: netsim.SimResult, label: str) -> list[dict]:
+    """Per-event report rows with semantic names (pad rows in the event
+    table duplicate the last boundary, so names match on start tick)."""
+    names = _window_names(res.cfg, label)
+    rows = []
+    for rep in res.telemetry.fault_events:
+        rows.append({
+            "window": names.get(rep.start_tick,
+                                f"tick{rep.start_tick}"),
+            "start_t": rep.start_t,
+            "disrupted": rep.disrupted,
+            "reconverged": rep.reconverged,
+            "reinterleave_iters": (
+                rep.reinterleave_iters
+                if np.isfinite(rep.reinterleave_iters) else None),
+        })
+    return rows
+
+
+# windows exempt from the MLTCP re-convergence bound: while flows are
+# null-routed their job cannot take part in bandwidth interleaving (the
+# claim we hold is that MLTCP re-interleaves once the hole *closes*), and
+# the row-0 window is the t=0 baseline, not a fault — cold-start
+# convergence is the convergence suite's claim (and for DCQCN the slack
+# 2-job cold fabric offers no congestion signal to sort against at all)
+_EXEMPT = ("blackhole-active", "cold-start")
+
+# every fault type must appear among the asserted (non-exempt) windows
+_REQUIRED = ("departure", "arrival", "re-arrival", "flap", "flap-clear",
+             "blackhole-clear")
+
+# The baseline contrast is *distributional*, not per-window: at partial
+# contention (sum duty ~0.75) an unmodified baseline is not pinned in
+# sync — it oscillates into and out of synchronized episodes for the
+# whole run (reno-OFF measured here: stability 0.53-0.66, >=27% of
+# post-cold samples above threshold), so any single window can
+# transiently read as "re-converged".  What never happens is the
+# episodes dying out: across the gauntlet every baseline run has fault
+# windows it never cleanly re-converges from (the primary contrast,
+# asserted for every algo), and the TCP baselines' interleave stability
+# additionally sits strictly below their MLTCP counterparts on the
+# identical gauntlet.  DCQCN is exempt from the *stability* margin
+# only: its RED/ECN marks slowly de-phase single-QP flows regardless of
+# MLTCP, so on long tails dcqcn-OFF can drift into a fully de-phased
+# state (stability up to 1.0, seed-dependent) — for RoCE the claim is
+# the *speed* of re-interleaving after each fault, which the per-event
+# contrast above already pins, not the asymptotic tail state.
+_ML_MIN_STABILITY = 0.95
+_BASE_STABILITY_MARGIN = {"reno": 0.02, "cubic": 0.02, "dcqcn": 0.0}
+
+
+def _summarize(algo: str, label: str, base: list[netsim.SimResult],
+               ml: list[netsim.SimResult]) -> dict:
+    ml_rows = [_event_rows(r, label) for r in ml]
+    base_rows = [_event_rows(r, label) for r in base]
+    worst: dict[str, float] = {}
+    for rows in ml_rows:
+        for row in rows:
+            it = (row["reinterleave_iters"]
+                  if row["reinterleave_iters"] is not None else float("inf"))
+            worst[row["window"]] = max(worst.get(row["window"], 0.0), it)
+    out = {
+        "algo": algo, "schedule": label,
+        "worst_reinterleave_iters": {
+            k: (v if np.isfinite(v) else None) for k, v in worst.items()},
+        "events": ml_rows[0],
+        "baseline_events": base_rows[0],
+        "ml_stability": float(min(
+            r.telemetry.interleave_stability for r in ml)),
+        "baseline_stability": float(max(
+            r.telemetry.interleave_stability for r in base)),
+        "baseline_reconverged_frac": float(np.mean(
+            [row["reconverged"] for rows in base_rows for row in rows])),
+    }
+    # the robustness claim, enforced per fault event: MLTCP re-interleaves
+    # within a few training iterations after every boundary (worst case
+    # over seeds) and stays interleaved between them
+    held = {k: v for k, v in worst.items() if k not in _EXEMPT}
+    missing = [w for w in _REQUIRED if w not in held]
+    assert not missing, \
+        f"{algo}/{label}: fault windows never observed: {missing}"
+    bad = {k: v for k, v in held.items() if v > MAX_REINTERLEAVE_ITERS}
+    assert not bad, (f"{algo}/{label}: MLTCP re-interleave exceeded "
+                    f"{MAX_REINTERLEAVE_ITERS} iters: {bad}")
+    assert out["ml_stability"] >= _ML_MIN_STABILITY, (
+        f"{algo}/{label}: MLTCP interleave stability "
+        f"{out['ml_stability']:.3f} < {_ML_MIN_STABILITY}")
+    # the baseline never shakes off its synchronized episodes: per run it
+    # fails to re-converge from at least one fault window, and its
+    # stability stays strictly below MLTCP's on the identical gauntlet
+    assert not any(r.telemetry.all_events_reconverged for r in base), \
+        f"{algo}/{label}: unmodified baseline re-converged after faults"
+    margin = _BASE_STABILITY_MARGIN[algo]
+    assert (out["baseline_stability"]
+            <= out["ml_stability"] - margin), (
+        f"{algo}/{label}: baseline interleave stability "
+        f"{out['baseline_stability']:.3f} not below MLTCP's "
+        f"{out['ml_stability']:.3f} by {margin}")
+    return out
+
+
+def run(algos=("reno", "cubic", "dcqcn")) -> tuple[dict, int]:
+    pr = common.run_plan(make_plan(algos))
+    out: dict = {}
+    for algo in algos:
+        for label in SCHEDULES:
+            out[f"{algo}/{label}"] = _summarize(
+                algo, label,
+                pr.select(algo=algo, variant="OFF", schedule=label),
+                pr.select(algo=algo, variant="WI", schedule=label))
+    worst = max(v for s in out.values()
+                for v in s["worst_reinterleave_iters"].values()
+                if v is not None)
+    out["_worst_reinterleave_iters"] = worst
+    return out, pr.n_ticks
+
+
+if __name__ == "__main__":
+    import json
+    res, _ = run()
+    print(json.dumps(res, indent=1))

@@ -108,7 +108,8 @@ def plan(build, *, name: str = "", where=None, **axes) -> netsim.Plan:
 # from that prediction, and non-info plan-lint findings (avoidable splits).
 _PLAN_HEALTH = {"n_kernel_fallbacks": 0, "n_cache_hits": 0,
                 "n_compile_groups": 0, "n_groups_predicted": 0,
-                "n_group_mispredicts": 0, "n_plan_findings": 0}
+                "n_group_mispredicts": 0, "n_plan_findings": 0,
+                "n_group_errors": 0}
 
 
 def reset_plan_health() -> None:
@@ -141,6 +142,9 @@ def run_plan(p: netsim.Plan, **kw) -> netsim.PlanResult:
     _PLAN_HEALTH["n_kernel_fallbacks"] += pr.n_kernel_fallbacks
     _PLAN_HEALTH["n_cache_hits"] += pr.n_cache_hits
     _PLAN_HEALTH["n_compile_groups"] += pr.n_compile_groups
+    # keep_going=True salvage: failed compile groups land here instead of
+    # aborting the suite; a nonzero count in _health flags the partial run
+    _PLAN_HEALTH["n_group_errors"] += len(pr.group_errors)
     _PLAN_HEALTH["n_groups_predicted"] += predicted
     _PLAN_HEALTH["n_group_mispredicts"] += int(
         predicted != pr.n_compile_groups)

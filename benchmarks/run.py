@@ -17,6 +17,7 @@ REPRO_FULL=1 for paper-scale runs.
 from __future__ import annotations
 
 from benchmarks import (
+    churn,
     circular,
     common,
     convergence,
@@ -43,6 +44,7 @@ def main() -> None:
         ("fig16_slope_intercept", parameters.fig16_heatmap),
         ("fig17_wi_vs_md", parameters.fig17_wi_vs_md),
         ("kernel_sweep", kernel_sweep.run),
+        ("churn_gauntlet", churn.run),
     ]
     done = 0
     for name, fn in suites:

@@ -36,6 +36,11 @@ STRUCTURAL_FIELDS = frozenset({
     "ecn_mode", "rtt", "tick_dt", "mss",
     # workload / fabric shape
     "n_jobs", "n_flows", "n_phases", "sockets_per_job",
+    # fault-injection structure (netsim.faults.FaultSpec: the event-table
+    # row count and armed channels shape the traced program; schedule
+    # *values* ride the sweep and never appear in canonical configs)
+    "faults", "n_events", "churn", "link_flaps", "blackholes",
+    "straggle_bursts",
 })
 
 

@@ -48,6 +48,11 @@ def _kernel_sweep():
     return kernel_sweep.make_plan()
 
 
+def _churn():
+    from benchmarks import churn
+    return churn.make_plan()
+
+
 PLANS: dict[str, PlanEntry] = {
     "fig12": PlanEntry("fig12", _fig12),
     "fig13": PlanEntry("fig13", _fig13),
@@ -56,9 +61,14 @@ PLANS: dict[str, PlanEntry] = {
     "fig5": PlanEntry("fig5", _fig5, telemetry=_fig5_telemetry,
                       lint_unarmed=True),
     "kernel_sweep": PlanEntry("kernel_sweep", _kernel_sweep),
+    # the fault-injection suite: fused kernel + armed faults + reinterleave
+    # detector — the gate proves faults never unfuse the CC-tick kernel.
+    # make_plan stamps telemetry+faults on its configs itself (the spec
+    # depends on per-point fault structure), so no telemetry factory here.
+    "churn": PlanEntry("churn", _churn),
 }
 
-CI_PLANS = ("fig12", "fig13", "fig5", "kernel_sweep")
+CI_PLANS = ("fig12", "fig13", "fig5", "kernel_sweep", "churn")
 
 
 def resolve_entry(name: str):

@@ -232,6 +232,25 @@ def mltcp_cc_tick(cfg: core.MLTCPConfig, state: core.MLTCPState,
     dyn_vec = jnp.stack([jnp.asarray(v, jnp.float32) for v in dyn])
 
     n = state.cc.cwnd.shape[0]
+    # Per-flow operands must be rank-1 [N]: the engine-level layers above
+    # (fault injection most recently — netsim.faults applies its event
+    # tables *before* the CC tick) gather/reduce to flow vectors, and a
+    # table leaking through unreduced (e.g. [E, N]) would silently pack
+    # garbage rows into lanes.  Fail structurally instead.
+    for op_name, op in (("total_bytes", total_bytes),
+                        ("static_factors", static_factors),
+                        ("comm_elapsed", comm_elapsed),
+                        ("est_finish", est_finish)):
+        if op is None:
+            continue
+        shape = jnp.shape(op)
+        # a static shape tuple, not a traced value:
+        if shape not in ((), (n,)):  # lint: allow(branch-on-traced)
+            raise ValueError(
+                f"mltcp_cc_tick: operand {op_name!r} has shape {shape}, "
+                f"expected scalar or [N]={n} per-flow; an engine-level "
+                f"layer (fault event table?) leaked an unreduced array "
+                f"into the CC tick")
     n_pad = -(-n // _ROW) * _ROW
 
     # job-aggregated numerator (paper §4.1: stats aggregated per job);

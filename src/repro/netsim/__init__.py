@@ -31,6 +31,7 @@ from repro.netsim.engine import (
 )
 from repro.netsim.experiment import (
     Axis,
+    GroupError,
     GroupProfile,
     Plan,
     PlanProfile,
@@ -39,6 +40,18 @@ from repro.netsim.experiment import (
     restrict_workload,
     run_plan,
 )
+from repro.netsim.faults import (
+    FaultEvent,
+    FaultSchedule,
+    FaultSpec,
+    blackhole,
+    identity_schedule,
+    job_arrives,
+    job_departs,
+    link_flap,
+    straggle_burst,
+)
+from repro.netsim.faults import schedule as fault_schedule
 from repro.netsim.metrics import (
     SimResult,
     convergence_iteration,
@@ -64,8 +77,11 @@ __all__ = [
     "CassiniSchedule", "SimConfig", "JobSpec", "simulate",
     "SweepParams", "SweepPoint", "simulate_sweep", "make_sweep",
     "grid_sweep", "sweep_len", "sweep_of", "sweep_slice",
-    "Axis", "Plan", "PlanResult", "GroupProfile", "PlanProfile",
-    "prune_cache", "restrict_workload", "run_plan",
+    "Axis", "Plan", "PlanResult", "GroupError", "GroupProfile",
+    "PlanProfile", "prune_cache", "restrict_workload", "run_plan",
+    "FaultSpec", "FaultEvent", "FaultSchedule", "fault_schedule",
+    "identity_schedule", "job_arrives", "job_departs", "link_flap",
+    "blackhole", "straggle_burst",
     "SimResult", "interleave_score", "iteration_times",
     "mean_pairwise_interleave", "postprocess", "postprocess_sweep",
     "speedup_stats", "sweep_speedup_stats",

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mltcp as core
+from repro.netsim import faults as faults_mod
 from repro.netsim import telemetry as telem
 from repro.netsim.topology import HashableConfig, Topology
 
@@ -134,6 +135,14 @@ class SimConfig(HashableConfig):
     # program this engine emitted before probes existed (bit-identical
     # RawSimOutput, no extra traces — pinned by tests/test_telemetry.py).
     telemetry: Optional[telem.TelemetrySpec] = None
+    # Fault-injection structure (netsim.faults, DESIGN.md §8).  Like
+    # `telemetry`, the spec is static (row count + armed channels shape the
+    # traced program) while the schedule *values* ride in as SweepParams
+    # leaves — and None is the zero-cost default: every fault hook is gated
+    # on a python-level `cfg.faults is not None`, so an un-faulted config
+    # traces the exact pre-fault program (bit-identical RawSimOutput,
+    # pinned by tests/test_faults.py).
+    faults: Optional[faults_mod.FaultSpec] = None
 
     @property
     def n_ticks(self) -> int:
@@ -187,6 +196,15 @@ class SweepParams(NamedTuple):
     simply un-scheduled, which lets Cassini and non-Cassini points of a
     plan share one compile group (the branch exists in the program, the
     per-job gate decides).  All three are None when no point needs them.
+
+    The ``fault_*`` leaves are the fault-injection *schedule* (DESIGN.md
+    §8): an event table whose row count and armed channels are fixed by
+    ``cfg.faults`` (a static `FaultSpec`), whose *values* — event start
+    ticks, per-event job-activity masks, link-capacity multipliers,
+    blackhole masks, straggle boosts — are traced, so a churn grid
+    (schedule x seed x variant) shares one compile group.  All None when
+    ``cfg.faults`` is None; `faults.identity_schedule` gives exact-no-op
+    values for an armed spec.
     """
 
     slope: Array                # F(x) = slope * x + intercept      (Eq. 3)
@@ -207,6 +225,11 @@ class SweepParams(NamedTuple):
     cassini_offset: Optional[Array] = None  # [J] slot-grid offsets (s)
     cassini_period: Optional[Array] = None  # [J] slot periods; <=0 = off
     cassini_eps: Optional[Array] = None     # scalar agent tolerance (s)
+    fault_tick: Optional[Array] = None        # [E] int32 event start ticks
+    fault_job_active: Optional[Array] = None  # [E, J] bool churn masks
+    fault_link_scale: Optional[Array] = None  # [E, M] capacity multipliers
+    fault_blackhole: Optional[Array] = None   # [E, N] bool null-route masks
+    fault_straggle: Optional[Array] = None    # [E, J] straggle-prob boosts
 
     def dyn(self) -> core.DynamicParams:
         """The protocol-layer slice, for `core.cc_tick`."""
@@ -223,12 +246,30 @@ _POINT_NDIM = {
     "compute": 2, "comm_bytes": 2,
     "straggle_prob": 1, "iso_iter": 1,
     "cassini_offset": 1, "cassini_period": 1,
+    "fault_tick": 1, "fault_job_active": 2, "fault_link_scale": 2,
+    "fault_blackhole": 2, "fault_straggle": 2,
 }
-_FIELD_DTYPE = {"seed": jnp.int32, "job_active": jnp.bool_}
+_FIELD_DTYPE = {"seed": jnp.int32, "job_active": jnp.bool_,
+                "fault_tick": jnp.int32, "fault_job_active": jnp.bool_,
+                "fault_blackhole": jnp.bool_}
 
 
 def _point_shape(name: str, cfg: SimConfig) -> tuple[int, ...]:
     """The per-point (unbatched) shape of a sweep field on cfg's fabric."""
+    if name.startswith("fault_"):
+        if cfg.faults is None:
+            raise ValueError(
+                f"sweep field {name!r} needs cfg.faults (a FaultSpec) — "
+                f"fault schedule values have no meaning on an un-faulted "
+                f"config")
+        e = cfg.faults.n_events
+        if name == "fault_tick":
+            return (e,)
+        if name == "fault_link_scale":
+            return (e, cfg.topo.n_links)
+        if name == "fault_blackhole":
+            return (e, cfg.topo.n_flows)
+        return (e, cfg.jobs.n_jobs)       # fault_job_active / fault_straggle
     nd = _POINT_NDIM.get(name, 0)
     if nd == 0:
         return ()
@@ -253,6 +294,14 @@ def sweep_of(cfg: SimConfig) -> SweepParams:
         cas_off = jnp.asarray(cfg.cassini.offset, jnp.float32)
         cas_per = jnp.asarray(cfg.cassini.period, jnp.float32)
         cas_eps = jnp.asarray(cfg.cassini.eps, jnp.float32)
+    # an armed FaultSpec defaults to the identity schedule (exact no-op
+    # values); real schedules arrive as make_sweep overrides
+    fault_vals = {name: None for name in faults_mod.FIELDS}
+    if cfg.faults is not None:
+        ident = faults_mod.identity_schedule(cfg, cfg.faults).values
+        for name, v in ident.items():
+            fault_vals[name] = jnp.asarray(
+                v, _FIELD_DTYPE.get(name, jnp.float32))
     p = cfg.protocol
     jobs = cfg.jobs
     return SweepParams(
@@ -273,6 +322,7 @@ def sweep_of(cfg: SimConfig) -> SweepParams:
         cassini_offset=cas_off,
         cassini_period=cas_per,
         cassini_eps=cas_eps,
+        **fault_vals,
     )
 
 
@@ -599,6 +649,20 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     key, k_loss, k_cnp, k_strag, k_samt = jax.random.split(st.key, 5)
 
     # ------------------------------------------------------------------
+    # 0. Fault-event gather (cfg.faults is None -> this block vanishes)
+    # ------------------------------------------------------------------
+    fault_idx = None
+    if cfg.faults is not None:
+        # event rows are sorted by start tick; row e is in effect on
+        # [fault_tick[e], fault_tick[e+1]) and row 0 is the identity
+        # baseline at tick 0, so the current row is a rank over the tick
+        # column — one reduce + gather per tick, no control flow, and
+        # nothing reaches the CC-tick kernel (DESIGN.md §8)
+        fault_idx = jnp.clip(
+            jnp.sum((sweep.fault_tick <= st.tick).astype(jnp.int32)) - 1,
+            0, cfg.faults.n_events - 1)
+
+    # ------------------------------------------------------------------
     # 1. Job phase machine: compute countdown -> comm-phase entry
     # ------------------------------------------------------------------
     started = t >= statics.start_offset
@@ -606,6 +670,15 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
         # padded-jobs axis: masked-off jobs never start, so their flows
         # stay inert (no injection, no iterations) for this sweep point
         started = started & sweep.job_active
+    churn_row = None
+    if cfg.faults is not None and cfg.faults.churn:
+        # churn: a departed job's compute clock freezes (`started` gate)
+        # and its comm phase is force-exited below, so its flows stop
+        # injecting; on re-arrival the stale t_rem <= 0 re-enters the
+        # interrupted comm sub-phase with a fresh quota.  The identity
+        # row is all-True — `& True` is an exact no-op.
+        churn_row = sweep.fault_job_active[fault_idx]            # [J]
+        started = started & churn_row
     t_rem = jnp.where(~st.in_comm & started, st.t_rem - dt, st.t_rem)
     compute_done = ~st.in_comm & started & (t_rem <= 0.0)
 
@@ -629,6 +702,8 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
         hold_until = st.hold_until
 
     in_comm = st.in_comm | enter_comm
+    if churn_row is not None:
+        in_comm = in_comm & churn_row
 
     # flows of entering jobs pick up their sub-phase quota
     phase_bytes_job = sweep.comm_bytes[jnp.arange(J), st.phase_idx]  # [J]
@@ -645,6 +720,15 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     active = in_comm[statics.f2j] & (to_send > 0.0)
     inj = jnp.where(active, jnp.minimum(rate * dt, to_send), 0.0)
     to_send = to_send - inj
+    inj_lost = None
+    if cfg.faults is not None and cfg.faults.blackholes:
+        # blackholed flows are null-routed at the first hop: injected
+        # bytes vanish as drops (folded into dropped_f below, so they
+        # loss-signal after the usual feedback delay and retransmit when
+        # the hole closes).  Identity row is all-False: inj - 0.0 exact.
+        bh_row = sweep.fault_blackhole[fault_idx]                # [N]
+        inj_lost = jnp.where(bh_row, inj, 0.0)
+        inj = inj - inj_lost
 
     # ------------------------------------------------------------------
     # 3. Links: enqueue (RED) -> serve -> route departures
@@ -672,8 +756,15 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     backlog = st.backlog + kept
 
     tot = backlog[:M].sum(axis=1)
+    cap_eff = statics.cap
+    if cfg.faults is not None and cfg.faults.link_flaps:
+        # link flaps scale the *service* capacity only; acc_util keeps the
+        # nominal cap as its normalizer (utilization stays comparable
+        # across the flap, and scale=0.0 never divides by zero).  The
+        # identity row is all-ones: cap * 1.0 is bit-exact.
+        cap_eff = cap_eff * sweep.fault_link_scale[fault_idx]    # [M]
     serve_ratio = jnp.where(tot > 0.0,
-                            jnp.minimum(1.0, statics.cap * dt / jnp.maximum(tot, 1e-9)),
+                            jnp.minimum(1.0, cap_eff * dt / jnp.maximum(tot, 1e-9)),
                             0.0)
     serve_full = jnp.concatenate([serve_ratio, jnp.zeros((1,))])
     dep = backlog * serve_full[:, None]
@@ -691,6 +782,8 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
 
     # per-flow drop / mark signals
     dropped_f = dropped.sum(axis=0)                              # [N] bytes
+    if inj_lost is not None:
+        dropped_f = dropped_f + inj_lost       # blackholed first-hop bytes
     marked_f = marked.sum(axis=0)
     loss_evt = _lane_uniform(k_loss, N) < -jnp.expm1(-dropped_f / mss)
     cnp_evt = _lane_uniform(k_cnp, N) < -jnp.expm1(-marked_f / mss)
@@ -734,7 +827,13 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
     iter_idx = st.iter_idx + iter_done.astype(jnp.int32)
     iter_start = jnp.where(iter_done, t, st.iter_start)
 
-    straggles = _lane_uniform(k_strag, J) < sweep.straggle_prob
+    strag_p = sweep.straggle_prob
+    if cfg.faults is not None and cfg.faults.straggle_bursts:
+        # additive boost, clipped back to a probability; identity row is
+        # all-zeros (p + 0.0 and clip-to-[0,1] of a probability are exact)
+        strag_p = jnp.clip(strag_p + sweep.fault_straggle[fault_idx],
+                           0.0, 1.0)
+    straggles = _lane_uniform(k_strag, J) < strag_p
     strag_amt = (0.05 + 0.05 * _lane_uniform(k_samt, J)) * sweep.iso_iter
     straggle_extra = jnp.where(iter_done,
                                jnp.where(straggles, strag_amt, 0.0),
@@ -807,6 +906,13 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
                                    static_factors=static_factors)
             f_job = (jnp.zeros((J,), jnp.float32).at[statics.f2j]
                      .add(f_flow * statics.spj_inv))
+        # a churn-departed job leaves the interleave statistic exactly like
+        # a padded-out job: fold the current churn row into the activity
+        # mask (identity row is all-True -> an exact no-op `&`)
+        telem_active = sweep.job_active
+        if churn_row is not None:
+            telem_active = (churn_row if telem_active is None
+                            else telem_active & churn_row)
         sig = telem.TickSignals(
             tick=st.tick, t=t,
             cwnd=proto.cc.cwnd, rate=rate,
@@ -814,7 +920,10 @@ def _tick(cfg: SimConfig, statics: TickStatics, sweep: SweepParams,
             q_len=q_len, red_prob=p_red,
             in_comm=in_comm, phase_idx=phase_idx, iter_idx=iter_idx,
             iter_done=iter_done, iter_time=iter_time,
-            f_job=f_job, job_active=sweep.job_active)
+            f_job=f_job, job_active=telem_active,
+            fault_idx=fault_idx,
+            fault_ticks=(sweep.fault_tick if cfg.faults is not None
+                         else None))
         tstate = telem.tick_update(cfg, spec, st.telemetry, sig)
 
     return EngineState(
@@ -914,6 +1023,29 @@ def _validate_sweep(cfg: SimConfig, sweep: SweepParams) -> None:
     if any(c is not None for c in cas) and any(c is None for c in cas):
         raise ValueError("cassini_offset / cassini_period / cassini_eps "
                          "must be set together (or all None)")
+    if cfg.faults is None:
+        for name in faults_mod.FIELDS:
+            if getattr(sweep, name) is not None:
+                raise ValueError(
+                    f"sweep carries {name!r} but cfg.faults is None — set a "
+                    f"FaultSpec on the config so the fault gather is traced")
+    else:
+        required = cfg.faults.leaves()
+        for name in faults_mod.FIELDS:
+            v = getattr(sweep, name)
+            if name in required and v is None:
+                raise ValueError(
+                    f"cfg.faults arms {name!r} but the sweep leaf is None "
+                    f"(use faults.schedule / faults.identity_schedule)")
+            if name not in required and v is not None:
+                raise ValueError(
+                    f"sweep carries {name!r} but cfg.faults does not arm "
+                    f"that channel")
+        e = cfg.faults.n_events
+        if sweep.fault_tick.shape[-1] != e:
+            raise ValueError(
+                f"fault_tick has {sweep.fault_tick.shape[-1]} event rows; "
+                f"cfg.faults.n_events = {e}")
 
 
 def simulate_sweep(cfg: SimConfig, sweep: SweepParams) -> RawSimOutput:

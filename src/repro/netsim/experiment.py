@@ -57,6 +57,7 @@ import math
 import os
 import pickle
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -77,8 +78,8 @@ from repro.netsim.engine import (
 from repro.netsim.telemetry import TelemetrySpec
 from repro.netsim.topology import Topology
 
-__all__ = ["Axis", "Plan", "PlanResult", "GroupProfile", "PlanProfile",
-           "run_plan", "prune_cache", "restrict_workload",
+__all__ = ["Axis", "Plan", "PlanResult", "GroupError", "GroupProfile",
+           "PlanProfile", "run_plan", "prune_cache", "restrict_workload",
            "resolve_plan", "group_sweep"]
 
 _DYNAMIC_FIELDS = frozenset(SweepParams._fields)
@@ -106,6 +107,15 @@ class Axis:
     name), and ``resolve`` maps a label to the field's actual value — e.g.
     an axis named "solo" with values ("all", 0, 1) can resolve to
     `job_active` masks while results stay selectable by the human label.
+
+    ``field="*"`` targets *several* sweep fields at once: the resolved
+    value must be a ``{sweep field: value}`` dict — or a callable taking
+    the point's built `SimConfig` and returning one, for values whose
+    shapes depend on the config (a fault schedule's blackhole table is
+    [E, n_flows], and n_flows varies with the point's socket counts).
+    The fault-schedule axis of `benchmarks/churn.py` is the canonical use:
+    one human label resolves to the whole ``faults.FaultSchedule
+    .overrides()`` dict, so schedules ride the batched sweep.
     """
 
     name: str
@@ -127,7 +137,7 @@ class Axis:
 
     def is_dynamic(self) -> bool:
         if self.kind == "auto":
-            return self.target in _DYNAMIC_FIELDS
+            return self.target == "*" or self.target in _DYNAMIC_FIELDS
         return self.kind == "dynamic"
 
 
@@ -448,6 +458,21 @@ def _point_params(cfg: SimConfig, overrides: dict, group: _Group) -> SweepParams
         mask = np.zeros((j_ref,), bool)
         mask[:n] = True
         params = params._replace(job_active=jnp.asarray(mask))
+    if cfg.faults is not None:
+        # fault tables are built on the point's own fabric; pad the job /
+        # flow axis to the group's with identity values for the padded
+        # lanes (inactive jobs stay inactive, padded flows never
+        # blackhole).  Links are never padded — the pad-merge requires an
+        # identical link fabric.  cfg.faults rides the canonical config,
+        # so presence is uniform within a group.
+        n_flows_g = group.cfg.topo.n_flows
+        for fname, width, fill in (("fault_job_active", j_ref, False),
+                                   ("fault_straggle", j_ref, 0.0),
+                                   ("fault_blackhole", n_flows_g, False)):
+            v = getattr(params, fname)
+            if v is not None:
+                a = _pad_cols(np.asarray(v), width, fill)
+                params = params._replace(**{fname: jnp.asarray(a)})
     return params
 
 
@@ -560,6 +585,29 @@ class PlanProfile:
 
 
 @dataclasses.dataclass
+class GroupError:
+    """One compile group's failure under ``run_plan(keep_going=True)``.
+
+    ``signature`` names the group structurally (fabric size, algorithm,
+    kernel flag, dt) and ``point_labels`` carry the member points' axis
+    coordinates, so a salvaged run's report says exactly which cells are
+    missing and why; ``error`` is the stringified exception.
+    """
+
+    group_index: int
+    signature: str
+    point_labels: list[str]
+    error: str
+
+
+def _group_signature(group: _Group) -> str:
+    c = group.cfg
+    return (f"jobs={c.jobs.n_jobs} flows={c.topo.n_flows} "
+            f"algo={c.protocol.cc.algo} dt={c.dt} "
+            f"kernel={c.use_pallas_kernel} faults={c.faults is not None}")
+
+
+@dataclasses.dataclass
 class PlanResult:
     """All of a plan's results, each self-describing via its `SweepPoint`.
 
@@ -567,6 +615,10 @@ class PlanResult:
     ``select`` filters by axis values *preserving that order*, so two
     selections that differ only in a scheme axis stay seed-paired for
     `sweep_speedup_stats`.
+
+    Under ``run_plan(keep_going=True)`` a failed compile group leaves its
+    members' slots as None and appends a `GroupError` to ``group_errors``;
+    ``select`` / ``group_by`` skip the missing cells.
     """
 
     plan: Plan
@@ -585,6 +637,9 @@ class PlanResult:
     # per-group runtime profile (wall times always; the trace/compile/
     # execute split and device footprint under run_plan(..., profile=True))
     profile: PlanProfile = dataclasses.field(default_factory=PlanProfile)
+    # compile groups that failed under keep_going=True (empty otherwise —
+    # the default keep_going=False re-raises at the failing group)
+    group_errors: list[GroupError] = dataclasses.field(default_factory=list)
 
     def __len__(self) -> int:
         return len(self.results)
@@ -597,7 +652,8 @@ class PlanResult:
 
     def select(self, **axis_values) -> list[metrics.SimResult]:
         """Results whose SweepPoint matches every given axis=value."""
-        out = [r for r in self.results if r.point.matches(**axis_values)]
+        out = [r for r in self.results
+               if r is not None and r.point.matches(**axis_values)]
         if not out:
             raise KeyError(f"no plan point matches {axis_values} "
                            f"(axes: {[a.name for a in self.plan.axes]})")
@@ -607,6 +663,8 @@ class PlanResult:
         """Pivot results by the given axis names -> ordered result lists."""
         out: dict[tuple, list[metrics.SimResult]] = {}
         for r in self.results:
+            if r is None:
+                continue
             key = tuple(r.point[n] for n in names)
             out.setdefault(key, []).append(r)
         return out
@@ -614,7 +672,7 @@ class PlanResult:
     @property
     def n_ticks(self) -> int:
         """Total simulator ticks executed (for µs/tick accounting)."""
-        return sum(r.cfg.n_ticks for r in self.results)
+        return sum(r.cfg.n_ticks for r in self.results if r is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -726,8 +784,11 @@ def prune_cache(cache_dir: str) -> int:
 
     Stale-version entries are already unreachable (the version salts the
     key and prefixes the filename), so this only reclaims disk; returns the
-    number of files removed.  Unversioned `.pkl` files (the v1 layout) and
-    torn `.tmp` leftovers are pruned too; current-version entries are kept.
+    number of files removed.  Unversioned `.pkl` files (the v1 layout),
+    torn `.tmp` leftovers, quarantined ``*.corrupt`` entries and zero-byte
+    current-version entries (a crash between `open` and the first write of
+    some other tool — `_cache_save` itself is atomic) are pruned too;
+    healthy current-version entries are kept.
     """
     prefix = f"v{_SCHEMA_VERSION}-"
     removed = 0
@@ -736,23 +797,56 @@ def prune_cache(cache_dir: str) -> int:
     except OSError:
         return 0
     for name in names:
+        path = os.path.join(cache_dir, name)
         stale_pkl = name.endswith(".pkl") and not name.startswith(prefix)
-        if stale_pkl or name.endswith(".tmp"):
+        zero_byte = False
+        if name.endswith(".pkl") and not stale_pkl:
             try:
-                os.remove(os.path.join(cache_dir, name))
+                zero_byte = os.path.getsize(path) == 0
+            except OSError:
+                pass
+        if (stale_pkl or name.endswith(".tmp") or name.endswith(".corrupt")
+                or zero_byte):
+            try:
+                os.remove(path)
                 removed += 1
             except OSError:
                 pass
     return removed
 
 
+# Corrupt-entry paths already warned about this process (warn once per
+# entry, not once per plan re-run).
+_QUARANTINE_WARNED: set = set()
+
+
 def _cache_load(cache_dir: str, key: str) -> Optional[metrics.SimResult]:
     path = _cache_path(cache_dir, key)
     try:
-        with open(path, "rb") as f:
+        f = open(path, "rb")
+    except OSError:
+        return None         # missing: a plain cache miss
+    try:
+        with f:
+            if os.fstat(f.fileno()).st_size == 0:
+                raise pickle.UnpicklingError("zero-byte cache entry")
             return pickle.load(f)
-    except (OSError, pickle.UnpicklingError, EOFError, AttributeError):
-        return None         # missing or unreadable: just re-simulate
+    except Exception:
+        # Unreadable / truncated / schema-drifted entry: quarantine it
+        # (rename to *.corrupt, so the next resume of this plan doesn't
+        # trip over it again and `prune_cache` can reclaim it), warn once,
+        # and treat as a miss — a corrupt entry must never crash a
+        # resumable run.
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
+        if path not in _QUARANTINE_WARNED:
+            _QUARANTINE_WARNED.add(path)
+            warnings.warn(
+                f"quarantined corrupt plan-cache entry {path} -> *.corrupt;"
+                f" the point will be re-simulated", RuntimeWarning)
+        return None
 
 
 def _cache_save(cache_dir: str, key: str, res: metrics.SimResult) -> None:
@@ -774,19 +868,43 @@ def _cache_save(cache_dir: str, key: str, res: metrics.SimResult) -> None:
 # The runner
 # ---------------------------------------------------------------------------
 
-def _resolve_overrides(plan: Plan, points: list[dict]) -> list[dict]:
-    """Each point's resolved dynamic-axis overrides ({sweep field: value})."""
+def _resolve_overrides(plan: Plan, points: list[dict],
+                       cfgs: list[SimConfig]) -> list[dict]:
+    """Each point's resolved dynamic-axis overrides ({sweep field: value}).
+
+    A ``field="*"`` axis resolves to a dict of sweep-field overrides (or a
+    callable from the point's built config to one — see `Axis`); its
+    entries merge into the point's override dict like so many single-field
+    axes.
+    """
     dyn_axes = [ax for ax in plan.axes if ax.is_dynamic()]
     for ax in dyn_axes:
-        if ax.target not in _DYNAMIC_FIELDS:
+        if ax.target != "*" and ax.target not in _DYNAMIC_FIELDS:
             raise ValueError(f"axis {ax.name!r} is dynamic but targets "
                              f"unknown sweep field {ax.target!r}")
     overrides = []
-    for pt in points:
+    for pt, cfg in zip(points, cfgs):
         ov = {}
         for ax in dyn_axes:
             v = pt[ax.name]
-            ov[ax.target] = ax.resolve(v) if ax.resolve is not None else v
+            r = ax.resolve(v) if ax.resolve is not None else v
+            if ax.target != "*":
+                ov[ax.target] = r
+                continue
+            if callable(r):
+                r = r(cfg)
+            if not isinstance(r, dict):
+                raise ValueError(
+                    f"axis {ax.name!r} targets field='*' so each label "
+                    f"must resolve to a dict of sweep-field overrides "
+                    f"(or a callable(cfg) -> dict); "
+                    f"label {pt[ax.name]!r} gave {type(r).__name__}")
+            for fname, val in r.items():
+                if fname not in _DYNAMIC_FIELDS:
+                    raise ValueError(
+                        f"axis {ax.name!r} (field='*') override names "
+                        f"unknown sweep field {fname!r}")
+                ov[fname] = val
         overrides.append(ov)
     return overrides
 
@@ -810,7 +928,7 @@ def resolve_plan(plan: Plan, *, pad_jobs: bool = True,
     cfgs = [plan.build(dict(pt)) for pt in points]
     if telemetry is not None:
         cfgs = [dataclasses.replace(c, telemetry=telemetry) for c in cfgs]
-    overrides = _resolve_overrides(plan, points)
+    overrides = _resolve_overrides(plan, points, cfgs)
     groups = _compile_groups(cfgs, pad_jobs)
     return points, cfgs, overrides, groups
 
@@ -855,7 +973,8 @@ def _run_group_profiled(cfg: SimConfig, sweep: SweepParams,
 def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
              cache_dir: Optional[str] = None,
              telemetry: Optional[TelemetrySpec] = None,
-             profile: bool = False) -> PlanResult:
+             profile: bool = False,
+             keep_going: bool = False) -> PlanResult:
     """Execute a plan: one `simulate_sweep` per compile group.
 
     shard:     "auto" | True | False — lay each group's K axis across local
@@ -880,12 +999,19 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
                AOT lowering.  The AOT `.compile()` re-runs XLA on every
                call, so it is opt-in; the default path still profiles
                end-to-end wall time and whether each group (re)traced.
+    keep_going: isolate per-group failures — a compile group that raises
+               (bad config, OOM, compile error) is recorded on
+               `PlanResult.group_errors` (its members' result slots stay
+               None) and the remaining groups still run and cache, so one
+               poisoned cell cannot torch a long benchmark run.  The
+               default (False) re-raises at the failing group, exactly the
+               pre-existing behavior.
     """
     points = plan.points()
     cfgs = [plan.build(dict(pt)) for pt in points]
     if telemetry is not None:
         cfgs = [dataclasses.replace(c, telemetry=telemetry) for c in cfgs]
-    overrides = _resolve_overrides(plan, points)
+    overrides = _resolve_overrides(plan, points, cfgs)
 
     results: list[Optional[metrics.SimResult]] = [None] * len(points)
     keys: list[Optional[str]] = [None] * len(points)
@@ -899,39 +1025,53 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
 
     groups = _compile_groups([cfgs[i] for i in todo], pad_jobs)
     plan_profile = PlanProfile()
+    group_errors: list[GroupError] = []
     with counters.watch(reset_warnings=True) as plan_watch:
-        for group in groups:
+        for gi, group in enumerate(groups):
             idxs = [todo[j] for j in group.idxs]  # group indexes todo subset
-            per_point = [_point_params(cfgs[i], overrides[i], group)
-                         for i in idxs]
-            sweep = _stack_params(per_point)
-            k = len(idxs)
-            sweep, _ = _shard_sweep(sweep, k, shard)
-            prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
-                                n_flows=group.cfg.topo.n_flows,
-                                n_ticks=group.cfg.n_ticks,
-                                wall_s=0.0, traced=False)
-            if profile:
-                raw = _run_group_profiled(group.cfg, sweep, prof)
-            else:
-                with counters.watch() as w:
-                    t0 = time.perf_counter()
-                    raw = simulate_sweep(group.cfg, sweep)
-                    jax.block_until_ready(raw)
-                    prof.wall_s = time.perf_counter() - t0
-                prof.traced = w.traces > 0
-            plan_profile.groups.append(prof)
-            for slot, i in enumerate(idxs):
-                point = SweepPoint(axes=dict(points[i]),
-                                   params=per_point[slot],
-                                   n_jobs=cfgs[i].jobs.n_jobs)
-                raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s], raw)
-                results[i] = metrics.postprocess(cfgs[i], raw_i, point=point,
-                                                 n_jobs=point.n_jobs)
-                if cache_dir is not None:
-                    _cache_save(cache_dir, keys[i], results[i])
+            try:
+                per_point = [_point_params(cfgs[i], overrides[i], group)
+                             for i in idxs]
+                sweep = _stack_params(per_point)
+                k = len(idxs)
+                sweep, _ = _shard_sweep(sweep, k, shard)
+                prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
+                                    n_flows=group.cfg.topo.n_flows,
+                                    n_ticks=group.cfg.n_ticks,
+                                    wall_s=0.0, traced=False)
+                if profile:
+                    raw = _run_group_profiled(group.cfg, sweep, prof)
+                else:
+                    with counters.watch() as w:
+                        t0 = time.perf_counter()
+                        raw = simulate_sweep(group.cfg, sweep)
+                        jax.block_until_ready(raw)
+                        prof.wall_s = time.perf_counter() - t0
+                    prof.traced = w.traces > 0
+                plan_profile.groups.append(prof)
+                for slot, i in enumerate(idxs):
+                    point = SweepPoint(axes=dict(points[i]),
+                                       params=per_point[slot],
+                                       n_jobs=cfgs[i].jobs.n_jobs)
+                    raw_i = jax.tree_util.tree_map(lambda x, s=slot: x[s],
+                                                   raw)
+                    results[i] = metrics.postprocess(cfgs[i], raw_i,
+                                                     point=point,
+                                                     n_jobs=point.n_jobs)
+                    if cache_dir is not None:
+                        _cache_save(cache_dir, keys[i], results[i])
+            except Exception as exc:
+                if not keep_going:
+                    raise
+                group_errors.append(GroupError(
+                    group_index=gi,
+                    signature=_group_signature(group),
+                    point_labels=[SweepPoint(axes=dict(points[i])).label()
+                                  for i in idxs],
+                    error=f"{type(exc).__name__}: {exc}"))
     return PlanResult(plan=plan, results=results,
                       n_compile_groups=len(groups),
                       n_kernel_fallbacks=plan_watch.fallbacks,
                       n_cache_hits=n_cache_hits,
-                      profile=plan_profile)
+                      profile=plan_profile,
+                      group_errors=group_errors)

@@ -73,6 +73,11 @@ class TickSignals(NamedTuple):
     f_job: Optional[Array] = None   # [J] mean aggressiveness factor
     job_active: Optional[Array] = None  # [J] bool padded-jobs mask
     overlap: Optional[Array] = None     # scalar EWMA pairwise overlap
+    # fault-injection context (None when cfg.faults is None): the current
+    # event-table row and the table's start ticks — what the reinterleave
+    # detector segments its per-event statistics on
+    fault_idx: Optional[Array] = None   # int32 scalar, current event row
+    fault_ticks: Optional[Array] = None  # [E] int32 event start ticks
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +153,10 @@ def probe_shape(name: str, cfg) -> tuple[int, ...]:
 # The spec — static, hashable, part of the compile-group key
 # ---------------------------------------------------------------------------
 
-DETECTORS = ("interleave", "iter_sketch")
+DETECTORS = ("interleave", "iter_sketch", "reinterleave")
+
+# "reinterleave" is opt-in (it needs cfg.faults), so it is not a default
+DEFAULT_DETECTORS = ("interleave", "iter_sketch")
 
 DEFAULT_PROBES = ("flow_cwnd", "flow_rate", "link_queue", "link_mark_rate",
                   "job_incomm", "job_iter")
@@ -172,13 +180,19 @@ class TelemetrySpec:
                it for the final ``hold_frac`` of the run), "iter_sketch"
                bins completed iteration times into ``sketch_bins``
                log-spaced bins on [sketch_lo, sketch_hi] seconds for
-               streaming p50/p99.
+               streaming p50/p99, and "reinterleave" (opt-in; requires
+               ``cfg.faults``) segments the same overlap signal by
+               fault-event window — per event it records the first/last
+               tick the event's table row was current, the iteration count
+               at entry and the last tick overlap was bad, yielding
+               per-event disruption duration and *time-to-re-interleave*
+               in training iterations (DESIGN.md §8).
     """
 
     probes: tuple[str, ...] = DEFAULT_PROBES
     stride: int = 50
     capacity: Optional[int] = None
-    detectors: tuple[str, ...] = DETECTORS
+    detectors: tuple[str, ...] = DEFAULT_DETECTORS
     # an EWMA Jaccard above 0.5 means comm phases are majority-overlapping;
     # tau spans a fraction of an iteration so within-phase brush-ups don't
     # reset the convergence clock (picked against dense post-hoc traces —
@@ -204,10 +218,17 @@ class TelemetrySpec:
         return probe in self.probes
 
     def needs_interleave(self) -> bool:
-        return "interleave" in self.detectors or self.wants("interleave_overlap")
+        # reinterleave segments the interleave detector's overlap signal,
+        # so arming it arms the EWMA machinery too
+        return ("interleave" in self.detectors
+                or "reinterleave" in self.detectors
+                or self.wants("interleave_overlap"))
 
     def needs_sketch(self) -> bool:
         return "iter_sketch" in self.detectors
+
+    def needs_reinterleave(self) -> bool:
+        return "reinterleave" in self.detectors
 
     def validate(self) -> None:
         """Check every armed probe is registered (registry may grow after a
@@ -249,6 +270,13 @@ class TelemetryState(NamedTuple):
     tail_ticks: Optional[Array] = None     # int32 ticks in tail window
     # iteration-time sketch
     iter_hist: Optional[Array] = None      # [J, B] int32
+    # re-interleave detector: per-fault-event segmentation of the overlap
+    # signal (all [E], indexed by the engine's current event row)
+    ev_start_tick: Optional[Array] = None        # first tick row was current
+    ev_start_iter: Optional[Array] = None        # max iter count at entry
+    ev_end_tick: Optional[Array] = None          # last tick row was current
+    ev_last_bad_tick: Optional[Array] = None     # last bad tick in window
+    ev_iters_at_last_bad: Optional[Array] = None
 
 
 def init_state(cfg, spec: TelemetrySpec) -> TelemetryState:
@@ -269,6 +297,18 @@ def init_state(cfg, spec: TelemetrySpec) -> TelemetryState:
                   tail_ticks=jnp.asarray(0, jnp.int32))
     if spec.needs_sketch():
         kw.update(iter_hist=jnp.zeros((j, spec.sketch_bins), jnp.int32))
+    if spec.needs_reinterleave():
+        if cfg.faults is None:
+            raise ValueError(
+                "the 'reinterleave' detector segments statistics by fault "
+                "event, so it needs cfg.faults (a netsim.faults.FaultSpec); "
+                "arm faults or drop the detector")
+        e = cfg.faults.n_events
+        kw.update(ev_start_tick=jnp.full((e,), -1, jnp.int32),
+                  ev_start_iter=jnp.zeros((e,), jnp.int32),
+                  ev_end_tick=jnp.full((e,), -1, jnp.int32),
+                  ev_last_bad_tick=jnp.full((e,), -1, jnp.int32),
+                  ev_iters_at_last_bad=jnp.zeros((e,), jnp.int32))
     return TelemetryState(series=series,
                           sample_tick=jnp.full((cap,), -1, jnp.int32),
                           n_samples=jnp.asarray(0, jnp.int32), **kw)
@@ -312,6 +352,23 @@ def tick_update(cfg, spec: TelemetrySpec, st: TelemetryState,
             tail_bad=st.tail_bad + (bad & in_tail).astype(jnp.int32),
             tail_ticks=st.tail_ticks + in_tail.astype(jnp.int32))
         sig = sig._replace(overlap=overlap)
+
+        if spec.needs_reinterleave():
+            # segment the same bad/cur_iters signals by the current fault
+            # event row: one scatter per field, no control flow
+            ei = sig.fault_idx
+            first = st.ev_start_tick[ei] < 0
+            kw.update(
+                ev_start_tick=st.ev_start_tick.at[ei].set(
+                    jnp.where(first, sig.tick, st.ev_start_tick[ei])),
+                ev_start_iter=st.ev_start_iter.at[ei].set(
+                    jnp.where(first, cur_iters, st.ev_start_iter[ei])),
+                ev_end_tick=st.ev_end_tick.at[ei].set(sig.tick),
+                ev_last_bad_tick=st.ev_last_bad_tick.at[ei].set(
+                    jnp.where(bad, sig.tick, st.ev_last_bad_tick[ei])),
+                ev_iters_at_last_bad=st.ev_iters_at_last_bad.at[ei].set(
+                    jnp.where(bad, cur_iters,
+                              st.ev_iters_at_last_bad[ei])))
 
     if spec.needs_sketch():
         log_lo = math.log(spec.sketch_lo)
@@ -379,6 +436,29 @@ def chunk_capture(cfg, statics, st, ticks_per_chunk) -> tuple:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class FaultEventReport:
+    """Re-interleave verdict for one fault-event window (DESIGN.md §8).
+
+    ``disrupted`` is whether overlap ever exceeded the threshold inside the
+    window; ``reconverged`` whether it then stayed below for the window's
+    final hold fraction.  ``reinterleave_iters`` counts training iterations
+    from the event's start to the last bad tick — the paper-facing
+    "re-stabilizes within a few training iterations" number (0.0 when the
+    event never disrupted; inf when it never re-converged).
+    """
+
+    event: int
+    start_tick: int
+    start_t: float
+    end_tick: int
+    start_iter: int
+    disrupted: bool
+    reconverged: bool
+    disruption_s: float
+    reinterleave_iters: float
+
+
+@dataclasses.dataclass
 class TelemetryResult:
     """Numpy-side view of one run's telemetry (attached to `SimResult`).
 
@@ -401,6 +481,11 @@ class TelemetryResult:
     # iteration-time sketch
     iter_hist: Optional[np.ndarray] = None    # [J, B]
     bin_edges: Optional[np.ndarray] = None    # [B + 1] seconds
+    # re-interleave detector (one report per *observed* fault event —
+    # table rows whose window never arrived inside the run are skipped)
+    fault_events: Optional[list] = None       # list[FaultEventReport]
+    all_events_reconverged: bool = False
+    max_reinterleave_iters: float = float("nan")
 
     def timeline(self, probe: str) -> tuple[np.ndarray, np.ndarray]:
         """(t, values) for one armed probe's decimated series."""
@@ -489,4 +574,36 @@ def collect(cfg, state: TelemetryState,
         b = spec.sketch_bins
         out.bin_edges = spec.sketch_lo * (
             spec.sketch_hi / spec.sketch_lo) ** (np.arange(b + 1) / b)
+
+    if spec.needs_reinterleave():
+        starts = np.asarray(state.ev_start_tick)
+        start_iters = np.asarray(state.ev_start_iter)
+        ends = np.asarray(state.ev_end_tick)
+        last_bads = np.asarray(state.ev_last_bad_tick)
+        bad_iters = np.asarray(state.ev_iters_at_last_bad)
+        reports = []
+        for e in np.nonzero(starts >= 0)[0]:
+            s, t_end = int(starts[e]), int(ends[e])
+            window = t_end - s + 1
+            hold = int(round(spec.hold_frac * window))
+            last_bad = int(last_bads[e])
+            rep = FaultEventReport(
+                event=int(e), start_tick=s, start_t=s * cfg.dt,
+                end_tick=t_end, start_iter=int(start_iters[e]),
+                disrupted=last_bad >= 0, reconverged=True,
+                disruption_s=0.0, reinterleave_iters=0.0)
+            if last_bad >= 0:
+                if last_bad <= t_end - hold:
+                    rep.disruption_s = (last_bad + 1 - s) * cfg.dt
+                    rep.reinterleave_iters = float(
+                        int(bad_iters[e]) - rep.start_iter)
+                else:
+                    rep.reconverged = False
+                    rep.disruption_s = float("inf")
+                    rep.reinterleave_iters = float("inf")
+            reports.append(rep)
+        out.fault_events = reports
+        out.all_events_reconverged = all(r.reconverged for r in reports)
+        out.max_reinterleave_iters = (
+            max(r.reinterleave_iters for r in reports) if reports else 0.0)
     return out
