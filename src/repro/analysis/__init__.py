@@ -1,20 +1,32 @@
-"""repro.analysis — the three-layer static verifier.
+"""repro.analysis — the five-layer static verifier.
 
 Proves, before anything executes: the fused Pallas CC-tick kernel is in
 every lowering that claims it (IR lint), every compile-group split is
 explained and the prediction matches what the jit cache actually traces
-(plan lint), and the sources are free of the bug patterns that break
-tracing — np-in-scan, concretized tracers, f64 leaks, unit-suffix mixups
-(source lint).  One report, one CLI::
+(plan lint), the sources are free of the bug patterns that break
+tracing — np-in-scan, concretized tracers, f64 leaks, unit-suffix
+mixups, stale pragmas (source lint), the kernel *body* honors its
+memory-space / block / grid / elementwise-f32 invariants per
+specialization (kernel lint), and every compile group's
+flop/byte/memory/collective envelope matches the committed baseline
+(HLO budgets).  One report, one CLI::
 
-    PYTHONPATH=src python -m repro.analysis --ci --plan fig12
+    PYTHONPATH=src python -m repro.analysis --ci --profile ci
 
-See DESIGN.md §7 for the architecture and the full rule catalog.
+Severity profiles (``ci`` / ``bench`` / ``notebook``) re-weight the same
+rule catalog per consumer — CI gates strictly, notebooks get advisories.
+See DESIGN.md §7 for the architecture and §9 for the kernel/budget
+layers, the budget schema and the profile semantics.
 """
-from repro.analysis.findings import (AnalysisReport, Finding, Rule, RULES,
-                                     make_finding)
+from repro.analysis.findings import (AnalysisReport, Finding, PROFILES,
+                                     Rule, RULES, make_finding,
+                                     severity_for)
+from repro.analysis.hlo_budget import (BudgetBook, DEFAULT_TOLERANCES,
+                                       env_fingerprint, measure_group)
 from repro.analysis.jaxpr_lint import (kernel_expectation, lint_closed_jaxpr,
                                        lint_sweep)
+from repro.analysis.kernel_lint import (find_kernel_eqns, lint_kernel,
+                                        lint_kernel_eqn)
 from repro.analysis.plan_lint import (lint_plan, predict_compile_groups,
                                       STRUCTURAL_FIELDS)
 from repro.analysis.plans import CI_PLANS, PLANS, resolve_entry
@@ -22,8 +34,11 @@ from repro.analysis.runner import analyze_plan, run_analysis
 from repro.analysis.source_lint import lint_paths, lint_sources
 
 __all__ = [
-    "AnalysisReport", "Finding", "Rule", "RULES", "make_finding",
+    "AnalysisReport", "Finding", "PROFILES", "Rule", "RULES",
+    "make_finding", "severity_for",
+    "BudgetBook", "DEFAULT_TOLERANCES", "env_fingerprint", "measure_group",
     "kernel_expectation", "lint_closed_jaxpr", "lint_sweep",
+    "find_kernel_eqns", "lint_kernel", "lint_kernel_eqn",
     "lint_plan", "predict_compile_groups", "STRUCTURAL_FIELDS",
     "CI_PLANS", "PLANS", "resolve_entry",
     "analyze_plan", "run_analysis",

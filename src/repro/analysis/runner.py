@@ -1,4 +1,4 @@
-"""Drive the three lint layers over a plan set and assemble the report.
+"""Drive the five lint layers over a plan set and assemble the report.
 
 Per plan (and, for armed suites, per arming variant):
 
@@ -9,7 +9,13 @@ Per plan (and, for armed suites, per arming variant):
 3. accounting — `counters.watch` around the traces cross-checks the
    prediction (``plan/group-mismatch`` when the jit cache disagrees) and a
    deliberate re-trace of group 0 proves the cache is warm afterwards
-   (``plan/retrace`` otherwise).
+   (``plan/retrace`` otherwise);
+4. kernel lint — walk each fused group's ``pallas_call`` eqn in the
+   already-traced jaxpr (zero extra traces) and prove the CC-tick kernel
+   body's memory-space / block / grid / body-op invariants;
+5. HLO budgets (opt-in via ``budgets=``) — compile each group once and
+   compare its flop/byte/memory/collective envelope against the committed
+   baseline (`hlo_budget.BudgetBook`).
 
 ``expect_cold=True`` (the CLI/CI path: fresh process) hardens the
 cross-check into the strict proof groups_predicted == groups_traced; in a
@@ -18,15 +24,19 @@ are an error — cache hits from earlier work are legitimate.
 """
 from __future__ import annotations
 
-from repro.analysis import jaxpr_lint, plan_lint, source_lint
+from typing import Optional
+
+from repro.analysis import jaxpr_lint, kernel_lint, plan_lint, source_lint
 from repro.analysis.findings import AnalysisReport, make_finding
+from repro.analysis.hlo_budget import BudgetBook
 
 __all__ = ["analyze_plan", "run_analysis"]
 
 
 def _analyze_variant(label: str, plan, telemetry, *, pad_jobs: bool,
                      expect_cold: bool, whitelist: frozenset,
-                     report: AnalysisReport) -> None:
+                     report: AnalysisReport,
+                     budgets: Optional[BudgetBook] = None) -> None:
     from repro.netsim import counters, engine, experiment
 
     findings, pfacts = plan_lint.lint_plan(
@@ -34,18 +44,31 @@ def _analyze_variant(label: str, plan, telemetry, *, pad_jobs: bool,
     report.extend(findings)
     points, cfgs, overrides, groups = pfacts.pop("_resolved")
 
-    kernel_proven = f64_total = pallas_total = 0
+    kernel_proven = kernel_bodies = f64_total = pallas_total = 0
+    vmem_peak = 0
     with counters.watch() as w:
         for gi, group in enumerate(groups):
+            glabel = f"{label}/group{gi}"
             sweep = experiment.group_sweep(cfgs, overrides, group)
             gf, gfacts = jaxpr_lint.lint_sweep(
-                group.cfg, sweep, label=f"{label}/group{gi}",
-                whitelist=whitelist)
+                group.cfg, sweep, label=glabel, whitelist=whitelist)
             report.extend(gf)
             f64_total += gfacts["f64_ops"]
             pallas_total += gfacts["pallas_calls"]
             if gfacts["expectation"] == "fused" and gfacts["pallas_calls"]:
                 kernel_proven += 1
+            kf, kfacts = kernel_lint.lint_kernel(group.cfg, sweep,
+                                                 label=glabel)
+            report.extend(kf)
+            if kfacts["kernel_checked"]:
+                kernel_bodies += 1
+                vmem_peak = max(vmem_peak, kfacts["vmem_bytes_per_step"])
+            if budgets is not None:
+                # _group_signature alone is not unique (it omits e.g. the
+                # CC variant); the group index is deterministic per plan.
+                sig = f"group{gi}|{experiment._group_signature(group)}"
+                budgets.observe(label, sig,
+                                budget_measure(group.cfg, sweep))
     traced, fallbacks = w.traces, w.fallbacks
 
     if traced > len(groups):
@@ -82,6 +105,8 @@ def _analyze_variant(label: str, plan, telemetry, *, pad_jobs: bool,
                     g.cfg, experiment.group_sweep(cfgs, overrides, g))
                 == "fused"),
         "kernel_groups_proven": kernel_proven,
+        "kernel_bodies_linted": kernel_bodies,
+        "kernel_vmem_bytes_per_step": vmem_peak,
         "pallas_calls": pallas_total,
         "f64_ops": f64_total,
         "kernel_fallbacks": fallbacks,
@@ -89,11 +114,21 @@ def _analyze_variant(label: str, plan, telemetry, *, pad_jobs: bool,
     }
 
 
+# Indirection so tests can monkeypatch the expensive compile step without
+# stubbing XLA itself.
+def budget_measure(cfg, sweep) -> dict:
+    from repro.analysis import hlo_budget
+    return hlo_budget.measure_group(cfg, sweep)
+
+
 def analyze_plan(name: str, plan, *, telemetry=None, lint_unarmed=False,
                  pad_jobs: bool = True, expect_cold: bool = False,
                  whitelist: frozenset = frozenset(),
-                 report: AnalysisReport = None) -> AnalysisReport:
-    """All three static proofs for one plan; returns/extends the report."""
+                 report: AnalysisReport = None,
+                 budgets: Optional[BudgetBook] = None) -> AnalysisReport:
+    """All per-plan static proofs for one plan; returns/extends the
+    report.  Pass a `BudgetBook` to also measure + ledger each group's
+    cost envelope (the caller `finish()`es or `save()`s the book)."""
     if report is None:
         report = AnalysisReport()
     variants = [(name, telemetry)]
@@ -102,21 +137,29 @@ def analyze_plan(name: str, plan, *, telemetry=None, lint_unarmed=False,
     for label, telem in variants:
         _analyze_variant(label, plan, telem, pad_jobs=pad_jobs,
                          expect_cold=expect_cold, whitelist=whitelist,
-                         report=report)
+                         report=report, budgets=budgets)
     return report
 
 
 def run_analysis(plan_names=(), *, source: bool = True,
-                 expect_cold: bool = False) -> AnalysisReport:
-    """The CLI entry: named plans (registry) + the source lint."""
+                 expect_cold: bool = False, profile: Optional[str] = None,
+                 budgets: Optional[BudgetBook] = None) -> AnalysisReport:
+    """The CLI entry: named plans (registry) + the source lint.
+
+    ``profile`` stamps the report's severity profile (ci/bench/notebook);
+    ``budgets`` arms layer 5 — in check mode its findings land in the
+    report, in update mode the caller `save()`s afterwards.
+    """
     from repro.analysis import plans as plan_registry
 
-    report = AnalysisReport()
+    report = AnalysisReport(profile=profile)
     for name in plan_names:
         plan, telemetry, lint_unarmed = plan_registry.resolve_entry(name)
         analyze_plan(name, plan, telemetry=telemetry,
                      lint_unarmed=lint_unarmed, expect_cold=expect_cold,
-                     report=report)
+                     report=report, budgets=budgets)
+    if budgets is not None and not budgets.update:
+        report.extend(budgets.finish())
     if source:
         findings, facts = source_lint.lint_paths()
         report.extend(findings)

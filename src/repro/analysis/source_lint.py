@@ -26,7 +26,10 @@ comparisons (``src/unit-suffix``: ``_bytes`` vs ``_s`` vs ``_bps`` vs
 False-positive escape hatch: an inline pragma on the offending line —
 ``# lint: allow(np-in-scan)`` — suppresses that rule for that line (the
 one legitimate case in-tree is telemetry's trace-time-static
-``np.triu_indices`` pair index; see DESIGN.md §7).
+``np.triu_indices`` pair index; see DESIGN.md §7).  Pragmas are audited
+in turn: after all rule passes run, any pragma naming an unknown rule id,
+or one that suppressed nothing on its line, raises ``src/stale-pragma``
+so suppressions cannot outlive the code they excused.
 """
 from __future__ import annotations
 
@@ -75,6 +78,7 @@ class _Module:
     imports: dict = dataclasses.field(default_factory=dict)       # alias -> module
     from_imports: dict = dataclasses.field(default_factory=dict)  # name -> (mod, orig)
     functions: dict = dataclasses.field(default_factory=dict)     # qual -> node
+    pragma_hits: set = dataclasses.field(default_factory=set)     # (lineno, token)
 
 
 def _module_name(path: Path) -> str:
@@ -272,8 +276,41 @@ def _allowed(mod: _Module, lineno: int, rule: str) -> bool:
         if m:
             allowed = {r.strip() for r in m.group(1).split(",")}
             short = rule.split("/", 1)[-1]
-            return rule in allowed or short in allowed
+            for token in (rule, short):
+                if token in allowed:
+                    mod.pragma_hits.add((lineno, token))
+                    return True
     return False
+
+
+def _lint_pragmas(modules: list, findings: list) -> int:
+    """Post-pass (runs after every rule pass has recorded its
+    suppressions): flag pragmas that name an unknown rule or suppressed
+    nothing on their line.  Returns the pragma count."""
+    from repro.analysis.findings import RULES
+
+    known = set(RULES) | {r.split("/", 1)[-1] for r in RULES}
+    n_pragmas = 0
+    for mod in modules:
+        for lineno, line in enumerate(mod.lines, start=1):
+            m = _PRAGMA.search(line)
+            if m is None:
+                continue
+            n_pragmas += 1
+            for token in (t.strip() for t in m.group(1).split(",")):
+                where = f"{mod.filename}:{lineno}"
+                if token not in known:
+                    findings.append(make_finding(
+                        "src/stale-pragma", where,
+                        f"pragma allows unknown rule {token!r} — no "
+                        f"registered rule has that id or short name"))
+                elif (lineno, token) not in mod.pragma_hits:
+                    findings.append(make_finding(
+                        "src/stale-pragma", where,
+                        f"pragma allows {token!r} but no such finding "
+                        f"fires on this line — the suppression has "
+                        f"outlived the code it excused"))
+    return n_pragmas
 
 
 def _where(mod: _Module, node) -> str:
@@ -476,11 +513,13 @@ def _lint_modules(modules: list[_Module]) -> tuple[list[Finding], dict]:
                            reachable=f"{m.name}:{qual}" in reachable,
                            findings=findings)
         _lint_units(m, findings)
+    n_pragmas = _lint_pragmas(modules, findings)
 
     facts = {"modules": len(modules),
              "functions": len(index.table),
              "loop_roots": len(roots),
-             "scan_reachable": len(reachable)}
+             "scan_reachable": len(reachable),
+             "pragmas": n_pragmas}
     return findings, facts
 
 

@@ -28,6 +28,7 @@ DynamicParams and vmapped sweeps) in tests/test_kernels.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -53,6 +54,45 @@ OUT_ORDER = list(DET_FIELDS) + list(CC_FIELDS) + ["stage", "ratio", "rate"]
 # Layout of the dyn SMEM operand (== core.DynamicParams field order).
 DYN_FIELDS = ("slope", "intercept", "g", "gamma", "init_comm_gap")
 NDYN = len(DYN_FIELDS)
+
+# The kernel body's name in traced programs (`name_and_src_info`); the
+# pallas batching rule appends "_batched" under vmap, so locate the
+# CC-tick pallas_call by prefix-matching this.  This is the static
+# analyzer's handle onto the body jaxpr (analysis/kernel_lint.py): the
+# body is reachable from the already-traced sweep jaxpr via the
+# pallas_call eqn's `jaxpr` param, so linting it costs zero extra traces.
+KERNEL_NAME = "_kernel"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelLayout:
+    """The operand/grid layout a (rows, factors) specialization must lower
+    to — the contract between `mltcp_tick_arrays` (which builds the
+    pallas_call) and `analysis.kernel_lint` (which proves the traced
+    program matches).  Everything here is static: if ops.py's packing and
+    this expectation ever diverge, the kernel lint fires on the next run.
+    """
+
+    rows: int                       # [rows, 128]-packed flow state
+    block: tuple                    # (min(SUBLANES, rows), LANES)
+    grid: tuple                     # (rows // block[0],) — exact cover
+    n_inputs: int                   # dyn + optional factors + IN_ORDER
+    n_outputs: int                  # OUT_ORDER
+    dyn_index: int                  # position of the SMEM scalars operand
+    dyn_shape: tuple                # (NDYN,)
+    use_static_factors: bool
+
+
+def expected_layout(rows: int, use_static_factors: bool = False
+                    ) -> KernelLayout:
+    """The layout `mltcp_tick_arrays` produces for `rows` packed rows."""
+    block = (min(SUBLANES, rows), LANES)
+    return KernelLayout(
+        rows=rows, block=block, grid=(rows // block[0],),
+        n_inputs=1 + int(use_static_factors) + len(IN_ORDER),
+        n_outputs=len(OUT_ORDER),
+        dyn_index=0, dyn_shape=(NDYN,),
+        use_static_factors=use_static_factors)
 
 
 def _kernel(p, dyn_ref, *refs):

@@ -169,6 +169,26 @@ rg_lru.defvjp(_rg_lru_vjp_fwd, _rg_lru_vjp_bwd)
 _ROW = ms.LANES * ms.SUBLANES
 
 
+def packed_rows(n_flows: int) -> int:
+    """[rows, 128] rows `mltcp_cc_tick` packs ``n_flows`` flow-state
+    vectors into (flows pad to a SUBLANESxLANES multiple, so rows is
+    always a multiple of SUBLANES and the grid divides evenly)."""
+    return (-(-n_flows // _ROW) * _ROW) // ms.LANES
+
+
+def kernel_layout(n_flows: int, use_static_factors: bool = False
+                  ) -> ms.KernelLayout:
+    """The specialization expectation for an ``n_flows``-flow fabric.
+
+    This is the packing contract `analysis.kernel_lint` checks the traced
+    pallas_call against — derived from the same `_ROW` padding
+    `mltcp_cc_tick` applies, so the expectation and the dispatch can
+    never drift apart silently.
+    """
+    return ms.expected_layout(packed_rows(n_flows),
+                              use_static_factors=use_static_factors)
+
+
 def _pack(x, n_pad, fill=0.0, dtype=jnp.float32):
     x = jnp.asarray(x, dtype)
     x = jnp.pad(x, (0, n_pad - x.shape[0]), constant_values=fill)

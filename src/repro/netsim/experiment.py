@@ -544,6 +544,8 @@ class GroupProfile:
     compile_s: Optional[float] = None
     execute_s: Optional[float] = None
     device_bytes: Optional[int] = None  # temp+output footprint, if exposed
+    cost_envelope: Optional[dict] = None  # roofline.hlo.cost_envelope keys
+    signature: Optional[str] = None     # _group_signature, for budget keys
 
 
 @dataclasses.dataclass
@@ -967,6 +969,11 @@ def _run_group_profiled(cfg: SimConfig, sweep: SweepParams,
                                 + mem.argument_size_in_bytes)
     except Exception:               # backend doesn't expose the analysis
         prof.device_bytes = None
+    try:
+        from repro.roofline import hlo as hlo_mod
+        prof.cost_envelope = hlo_mod.cost_envelope(compiled)
+    except Exception:               # backend doesn't expose cost analysis
+        prof.cost_envelope = None
     return raw
 
 
@@ -1038,7 +1045,8 @@ def run_plan(plan: Plan, *, shard="auto", pad_jobs: bool = True,
                 prof = GroupProfile(n_points=k, n_jobs=group.cfg.jobs.n_jobs,
                                     n_flows=group.cfg.topo.n_flows,
                                     n_ticks=group.cfg.n_ticks,
-                                    wall_s=0.0, traced=False)
+                                    wall_s=0.0, traced=False,
+                                    signature=_group_signature(group))
                 if profile:
                     raw = _run_group_profiled(group.cfg, sweep, prof)
                 else:

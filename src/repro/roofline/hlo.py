@@ -1,4 +1,4 @@
-"""HLO-text parsing: collective-communication bytes.
+"""HLO-text parsing: collective-communication bytes + compile-cost envelopes.
 
 `compiled.cost_analysis()` does not report collective traffic, so we parse
 the (SPMD-partitioned) HLO text and sum operand bytes of every all-gather /
@@ -9,10 +9,15 @@ body appear once in the text regardless of trip count; the roofline table is
 therefore built from unrolled L=1/L=2 lowers where every op instance is
 visible, while dry-run records report the raw per-text totals alongside the
 schedule (op kinds + counts).
+
+`cost_envelope(compiled)` bundles the XLA cost/memory analyses plus the
+collective-byte parse into one flat dict — the per-compile-group envelope
+recorded by `analysis.hlo_budget` and attached to `GroupProfile`.
 """
 from __future__ import annotations
 
 import re
+import warnings
 
 _KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
           "collective-permute")
@@ -21,6 +26,11 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
+    # sub-byte int packs
+    "s4": 0.5, "u4": 0.5,
+    # the FP8 zoo
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
 }
 
 # e.g. "f32[16,128]{1,0}" or "bf16[8,16,128]"
@@ -35,23 +45,41 @@ _INSTR = re.compile(
     r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"\(")
 
+# dtypes we've already warned about, so a 10^5-line HLO text warns once.
+_warned_dtypes: set[str] = set()
 
-def _tensor_bytes(dtype: str, dims: str) -> float:
+
+def _tensor_bytes(dtype: str, dims: str,
+                  unknown: set | None = None) -> float:
     n = 1
     if dims:
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    width = _DTYPE_BYTES.get(dtype)
+    if width is None:
+        if unknown is not None:
+            unknown.add(dtype)
+        if dtype not in _warned_dtypes:
+            _warned_dtypes.add(dtype)
+            warnings.warn(
+                f"hlo: unknown dtype {dtype!r} in collective result shape; "
+                f"assuming 4 B/elem — add it to _DTYPE_BYTES",
+                stacklevel=2)
+        width = 4
+    return n * width
 
 
 def collective_bytes_from_text(txt: str) -> dict:
     """Sum result-tensor bytes per collective kind over the whole HLO text.
 
     `-done` halves of async pairs are skipped (their `-start` already counted
-    the payload).
+    the payload).  Dtypes missing from `_DTYPE_BYTES` are assumed 4 B/elem
+    and reported under ``"unknown_dtypes"`` so the caller can surface the
+    guess instead of silently trusting the total.
     """
     count: dict[str, int] = {k: 0 for k in _KINDS}
     total: dict[str, float] = {k: 0.0 for k in _KINDS}
+    unknown: set[str] = set()
     for line in txt.splitlines():
         m = _INSTR.search(line)
         if not m:
@@ -61,11 +89,45 @@ def collective_bytes_from_text(txt: str) -> dict:
             continue
         kind = op.replace("-start", "")
         results = m.group(1)
-        b = sum(_tensor_bytes(d, s) for d, s in _TENSOR.findall(results))
+        b = sum(_tensor_bytes(d, s, unknown)
+                for d, s in _TENSOR.findall(results))
         count[kind] += 1
         total[kind] += b
     return {
         "count_by_kind": {k: v for k, v in count.items() if v},
         "bytes_by_kind": {k: round(v, 1) for k, v in total.items() if v},
         "total_bytes": float(sum(total.values())),
+        "unknown_dtypes": sorted(unknown),
+    }
+
+
+def cost_envelope(compiled) -> dict:
+    """Flop/byte/memory/collective envelope of one compiled executable.
+
+    Keys (all floats except ``unknown_dtypes``): flops, transcendentals,
+    bytes_accessed (XLA cost analysis); argument_bytes, output_bytes,
+    temp_bytes, peak_bytes (memory analysis; peak = args + outs + temps,
+    alias overlap subtracted); collective_bytes + unknown_dtypes (HLO-text
+    parse).  Backends that return a per-computation list from
+    `cost_analysis()` (CPU) are normalized to the entry-computation dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    arg = float(getattr(mem, "argument_size_in_bytes", 0))
+    out = float(getattr(mem, "output_size_in_bytes", 0))
+    tmp = float(getattr(mem, "temp_size_in_bytes", 0))
+    alias = float(getattr(mem, "alias_size_in_bytes", 0))
+    coll = collective_bytes_from_text(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": arg,
+        "output_bytes": out,
+        "temp_bytes": tmp,
+        "peak_bytes": arg + out + tmp - alias,
+        "collective_bytes": float(coll["total_bytes"]),
+        "unknown_dtypes": coll["unknown_dtypes"],
     }

@@ -218,6 +218,27 @@ def test_np_in_scan_fires_and_pragma_suppresses():
     assert "src/np-in-scan" not in _rules(ok)
 
 
+def test_stale_pragma_unknown_rule_fires():
+    findings, facts = _scan_fixture(
+        ["c = c + 1  # lint: allow(no-such-rule)"])
+    stale = [f for f in findings if f.rule == "src/stale-pragma"]
+    assert stale and "unknown rule" in stale[0].message
+    assert facts["pragmas"] == 1
+
+
+def test_stale_pragma_unused_suppression_fires():
+    # the named rule exists but nothing fires on that line
+    findings, _ = _scan_fixture(["c = c + 1  # lint: allow(np-in-scan)"])
+    stale = [f for f in findings if f.rule == "src/stale-pragma"]
+    assert stale and "outlived" in stale[0].message
+
+
+def test_stale_pragma_quiet_when_suppression_is_live():
+    findings, _ = _scan_fixture(
+        ["c = np.sin(c)  # lint: allow(np-in-scan)"])
+    assert "src/stale-pragma" not in _rules(findings)
+
+
 def test_float_cast_on_traced_fires():
     findings, _ = _scan_fixture(["y = jnp.sum(c)", "c = c + float(y)"])
     assert "src/float-cast-traced" in _rules(findings)
@@ -326,8 +347,42 @@ def test_rule_catalog_is_complete():
         "plan/group-split", "plan/avoidable-split", "plan/group-mismatch",
         "plan/retrace",
         "src/np-in-scan", "src/float-cast-traced", "src/branch-on-traced",
-        "src/f64-literal", "src/unit-suffix",
+        "src/f64-literal", "src/unit-suffix", "src/stale-pragma",
+        "kernel/dyn-not-smem", "kernel/dyn-written", "kernel/state-not-vmem",
+        "kernel/block-misaligned", "kernel/grid-remainder",
+        "kernel/operand-mismatch", "kernel/f64-in-body",
+        "kernel/gather-scatter", "kernel/nested-control",
+        "kernel/vmem-budget",
+        "budget/drift", "budget/missing-baseline", "budget/stale-baseline",
+        "budget/env-mismatch", "budget/unknown-dtype",
     }
     assert set(RULES) == expected
     for r in RULES.values():
         assert r.summary and r.rationale
+
+
+def test_severity_profiles():
+    from repro.analysis import severity_for
+
+    # ci promotes baseline-hygiene warnings; bench = declared defaults;
+    # notebook demotes errors to advisory warnings unless overridden
+    assert severity_for("src/stale-pragma") == "warning"
+    assert severity_for("src/stale-pragma", "ci") == "error"
+    assert severity_for("budget/missing-baseline", "ci") == "error"
+    assert severity_for("budget/drift", "bench") == "error"
+    assert severity_for("budget/drift", "notebook") == "warning"
+    assert severity_for("kernel/dyn-not-smem", "ci") == "error"
+
+
+def test_report_profile_gates_ok():
+    from repro.analysis import AnalysisReport, make_finding
+
+    f = make_finding("src/stale-pragma", "x.py:1", "stale")
+    ci = AnalysisReport(profile="ci")
+    ci.extend([f])
+    assert not ci.ok() and ci.errors()
+    nb = AnalysisReport(profile="notebook")
+    nb.extend([f])
+    assert nb.ok() and not nb.errors()
+    js = ci.to_json()
+    assert js["profile"] == "ci" and js["findings"][0]["severity"] == "error"
